@@ -1,0 +1,37 @@
+"""Paper Table 2 / Fig. 4 analog: cross-architecture ECM comparison.
+
+(a) The four Xeons — our model reproduces the paper's Table 2 rows
+    (pinned by tests/test_ecm.py).
+(b) The TPU generations v4 / v5e / v5p — the same analysis transplanted:
+    per-block core/HBM cycles for the AVX-analog (vectorized, unroll 8)
+    Kahan dot, the bound, and the Kahan-vs-naive "free-ness" verdict.
+"""
+
+from benchmarks.common import emit
+from repro.core import ecm
+
+
+def main() -> None:
+    print("# (a) x86 ECM (paper Table 2): machine,pred_cy{L1|L2|L3|Mem},"
+          "perf_GUP/s{L1|L2|L3|Mem},n_s")
+    for m in (ecm.SNB, ecm.IVB, ecm.HSW, ecm.BDW):
+        r = ecm.ecm_x86(m, ecm.KAHAN_AVX_SP)
+        print(f"{m.name},{r.pred_shorthand()},{r.perf_gups},{r.n_s}")
+        emit(f"x86_{m.name}_kahan_avx", 0.0,
+             f"mem_perf={r.perf_gups[3]}GUPs;n_s={r.n_s}")
+
+    print("# (b) TPU generations: machine,kernel,t_core_cy,t_hbm_cy,"
+          "perf_GUP/s,bound,kahan_free")
+    for m in (ecm.TPU_V4, ecm.TPU_V5E, ecm.TPU_V5P):
+        naive = ecm.ecm_tpu(m, ecm.NAIVE_DOT_TPU)
+        kahan = ecm.ecm_tpu(m, ecm.KAHAN_DOT_TPU)
+        free = kahan.perf_db_gups >= naive.perf_db_gups * 0.999
+        print(f"{m.name},kahan,{kahan.t_core_cy:.1f},{kahan.t_hbm_cy:.1f},"
+              f"{kahan.perf_db_gups},{kahan.bound},{free}")
+        emit(f"tpu_{m.name}_kahan", 0.0,
+             f"perf={kahan.perf_db_gups}GUPs;bound={kahan.bound};"
+             f"free={free}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and prints
+the per-cell three-term roofline table. Does NOT run compiles itself — run
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+first (CPU-expensive; the checked-in JSONs are the record).
+"""
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_cells(path: str = "experiments/dryrun"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        print("# no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    print("# roofline: arch,shape,mesh,status,compute_ms,memory_ms,"
+          "collective_ms,dominant,roofline_frac,useful_flops_ratio")
+    ok = skipped = failed = 0
+    for c in cells:
+        if c.get("status") == "skipped":
+            skipped += 1
+            print(f"{c['arch']},{c['shape']},{c['mesh']},skipped,,,,,,")
+            continue
+        if c.get("status") != "ok":
+            failed += 1
+            print(f"{c['arch']},{c['shape']},{c['mesh']},ERROR,,,,,,")
+            continue
+        ok += 1
+        print(f"{c['arch']},{c['shape']},{c['mesh']},ok,"
+              f"{c['compute_s'] * 1e3:.2f},{c['memory_s'] * 1e3:.2f},"
+              f"{c['collective_s'] * 1e3:.2f},{c['dominant']},"
+              f"{c['roofline_fraction']:.4f},"
+              f"{c['useful_flops_ratio']:.3f}")
+    emit("dryrun_cells_ok", 0.0, f"ok={ok};skipped={skipped};failed={failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 3 analog: multicore scaling P(n) = min(n*P_1, I*b_S).
+
+(a) IVB SP/DP curves — reproduces the paper's saturation points (4 cores
+    AVX-SP, 11 scalar-SP "never", 6 scalar-DP).
+(b) TPU multi-chip analog: per-chip HBM is private so the *chip-level*
+    curve scales linearly until the cross-chip reduction (ICI) term bites;
+    we report the modeled distributed-dot throughput for 1..256 v5e chips
+    with the final (s, c) pair folded over ICI.
+"""
+
+from benchmarks.common import emit
+from repro.core import ecm
+
+
+def main() -> None:
+    print("# (a) IVB in-memory scaling, GUP/s vs cores (paper Fig. 3)")
+    print("# cores,naive,kahan_avx,kahan_sse,kahan_scalar,kahan_scalar_dp")
+    for n in range(1, 11):
+        row = [str(n)]
+        for kern in (ecm.NAIVE_SP, ecm.KAHAN_AVX_SP, ecm.KAHAN_SSE_SP,
+                     ecm.KAHAN_SCALAR_SP, ecm.KAHAN_SCALAR_DP):
+            row.append(f"{ecm.multicore_scaling(ecm.IVB, kern, n):.2f}")
+        print(",".join(row))
+    for kern, name in ((ecm.NAIVE_SP, "naive"), (ecm.KAHAN_AVX_SP, "avx"),
+                       (ecm.KAHAN_SCALAR_SP, "scalar"),
+                       (ecm.KAHAN_SCALAR_DP, "scalar_dp")):
+        r = ecm.ecm_x86(ecm.IVB, kern)
+        emit(f"scaling_ivb_{name}", 0.0,
+             f"n_s={r.n_s};P_sat={min(r.p_bw_gups, 10 * r.perf_gups[3]):.2f}GUPs")
+
+    print("# (b) v5e multi-chip distributed dot (length 2^30 per chip)")
+    print("# chips,GUP/s_total,efficiency")
+    m = ecm.TPU_V5E
+    kern = ecm.ecm_tpu(m, ecm.KAHAN_DOT_TPU)
+    per_chip = kern.perf_db_gups  # HBM-bound streaming phase
+    n_elems = 2 ** 30
+    stream_s = n_elems / (per_chip * 1e9)
+    for chips in (1, 4, 16, 64, 256):
+        # final fold: log2(chips) hops of a 8-byte (s,c) pair — latency-
+        # dominated; model 1 us/hop (ICI hop latency class)
+        import math
+
+        fold_s = math.ceil(math.log2(chips)) * 1e-6 if chips > 1 else 0.0
+        total = chips * n_elems / (stream_s + fold_s) / 1e9
+        eff = total / (chips * per_chip)
+        print(f"{chips},{total:.1f},{eff:.4f}")
+        if chips in (1, 256):
+            emit(f"scaling_v5e_{chips}chips", 0.0,
+                 f"GUPs={total:.0f};eff={eff:.3f}")
+
+
+if __name__ == "__main__":
+    main()

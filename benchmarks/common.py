@@ -1,0 +1,22 @@
+"""Benchmark utilities: timing + CSV emission."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5, **kw):
+    """Median wall time (us) of a jitted callable (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,37 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus commented context
+blocks). Mapping to the paper:
+
+  bench_accuracy        motivation (why compensate): error vs condition
+  bench_dot_variants    Fig. 2 — per-variant cycles across the hierarchy
+  bench_scaling         Fig. 3 — multicore/multichip scaling + saturation
+  bench_architectures   Table 2 / Fig. 4 — cross-generation comparison
+  bench_flash_attention the §Perf-identified fix: fused attention with
+                        compensated online softmax
+  bench_e2e             system-level step cost, Kahan on/off
+  bench_roofline        §Roofline table from the dry-run artifacts
+"""
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accuracy,
+        bench_architectures,
+        bench_dot_variants,
+        bench_e2e,
+        bench_flash_attention,
+        bench_roofline,
+        bench_scaling,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (bench_accuracy, bench_dot_variants, bench_scaling,
+                bench_architectures, bench_flash_attention, bench_e2e,
+                bench_roofline):
+        print(f"# ===== {mod.__name__} =====")
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

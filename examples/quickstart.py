@@ -1,0 +1,43 @@
+"""Quickstart: the paper's kernel as a library call.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import numerics
+from repro.core.kahan import kahan_dot, kahan_sum, naive_dot
+from repro.kernels import ops
+
+
+def main():
+    # 1. An ill-conditioned dot product (cond ~ 1e6): naive fp32 loses
+    #    digits; the Kahan kernel recovers most; dot2 recovers all.
+    a, b, exact, cond = numerics.gen_dot(8192, 1e4, seed=0)
+    print(f"condition number: {cond:.2e}; exact value: {exact:.9e}")
+    for name, val in [
+        ("naive (sequential)", float(naive_dot(jnp.asarray(a), jnp.asarray(b)))),
+        ("kahan (pure jax)", float(kahan_dot(jnp.asarray(a), jnp.asarray(b)))),
+        ("kahan (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), mode="kahan"))),
+        ("dot2  (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), mode="dot2"))),
+    ]:
+        print(f"  {name:24s} {val:.9e}  relerr={numerics.relative_error(val, exact):.2e}")
+
+    # 2. Compensated summation: 1.0 added to 1e8, 4096 times, in fp32.
+    x = np.concatenate([[1e8], np.ones(4096)]).astype(np.float32)
+    print("\nsum of 1e8 + 4096 ones (fp32):")
+    print(f"  naive jnp.sum : {float(jnp.sum(jnp.asarray(x))):.1f}")
+    print(f"  kahan_sum     : {float(kahan_sum(jnp.asarray(x))):.1f}"
+          "   (exact: 100004096)")
+
+    # 3. The ECM model: why Kahan is free on TPU when vectorized.
+    from repro.core import ecm
+    for k in (ecm.NAIVE_DOT_TPU, ecm.KAHAN_DOT_TPU, ecm.KAHAN_DOT_SEQ_TPU):
+        r = ecm.ecm_tpu(ecm.TPU_V5E, k)
+        print(f"\nECM v5e {k.name}: {r.shorthand()}"
+              f"\n  -> {r.perf_db_gups} GUP/s ({r.bound}-bound)")
+
+
+if __name__ == "__main__":
+    main()

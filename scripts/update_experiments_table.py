@@ -1,0 +1,53 @@
+"""Regenerate the roofline table in EXPERIMENTS.md from experiments/dryrun.
+
+    PYTHONPATH=src python scripts/update_experiments_table.py
+"""
+
+import glob
+import json
+import re
+
+
+def build_table(mesh: str) -> str:
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        d = json.load(open(f))
+        if d.get("mesh") != mesh:
+            continue
+        if d.get("status") == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | skip | — | — | — | — "
+                        f"| — | — |")
+            continue
+        if d.get("status") != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | **ERROR** "
+                        f"| | | | | | |")
+            continue
+        ma = d.get("memory_analysis") or {}
+        args_gib = ma.get("argument_size_in_bytes", 0) / 2 ** 30
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | ok "
+            f"| {d['compute_s'] * 1e3:.1f} | {d['memory_s'] * 1e3:.1f} "
+            f"| {d['collective_s'] * 1e3:.1f} | {d['dominant'][:4]} "
+            f"| {d['roofline_fraction']:.4f} | {args_gib:.2f} |")
+    header = (
+        f"**Mesh {mesh}** — per-cell terms (ms) and state memory "
+        "(GiB/device):\n\n"
+        "| arch | shape | st | compute | memory | collective | dom "
+        "| roofline_frac | args GiB |\n"
+        "|---|---|---|---|---|---|---|---|---|\n")
+    return header + "\n".join(rows) + "\n"
+
+
+def main():
+    table = build_table("16x16") + "\n" + build_table("2x16x16")
+    text = open("EXPERIMENTS.md").read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    start = text.index(marker)
+    end = text.index("\nReading guide:")
+    text = text[:start] + marker + "\n\n" + table + text[end:]
+    open("EXPERIMENTS.md", "w").write(text)
+    print("table updated")
+
+
+if __name__ == "__main__":
+    main()

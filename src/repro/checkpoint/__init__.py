@@ -1,0 +1,8 @@
+"""Checkpointing: atomic, keep-N, elastic reshard-on-load."""
+
+from repro.checkpoint.manager import (  # noqa: F401
+    all_steps,
+    latest_step,
+    restore,
+    save,
+)

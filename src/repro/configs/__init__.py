@@ -1,0 +1,18 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    ArchConfig,
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    SHAPES,
+    SSMConfig,
+    ShapeSpec,
+    VisionStubConfig,
+    XLSTMConfig,
+    get_config,
+    get_smoke,
+    list_archs,
+    shape_applicable,
+)

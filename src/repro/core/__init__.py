@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — Kahan-compensated reductions + ECM model."""
+
+from repro.core.kahan import (  # noqa: F401
+    KahanAccumulator,
+    compensated_psum_scalar,
+    fast_two_sum,
+    kahan_combine,
+    kahan_dot,
+    kahan_dot2,
+    kahan_step,
+    kahan_sum,
+    naive_dot,
+    naive_sum,
+    tree_kahan_add,
+    tree_kahan_sq_norm,
+    two_prod,
+    two_sum,
+)
+from repro.core import ecm  # noqa: F401
+from repro.core import numerics  # noqa: F401

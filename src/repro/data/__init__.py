@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic, sharded, resumable synthetic LM stream."""
+
+from repro.data.pipeline import DataConfig, SyntheticLM  # noqa: F401

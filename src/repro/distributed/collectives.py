@@ -1,0 +1,50 @@
+"""Collective-layer utilities.
+
+Most collectives in this framework are implicit — pjit + GSPMD inserts
+all-gather/reduce-scatter/all-to-all from the sharding specs, and the XLA
+latency-hiding scheduler overlaps them with compute (enabled via the flags
+in launch/train.py). What lives here is the *explicitly managed* layer:
+
+* ``deterministic_mean`` — shard_map wrapper around the core compensated
+  scalar reduction (bitwise run-to-run reproducible metrics regardless of
+  reduction order; DESIGN.md §3 item 4).
+* ``reduce_scatter_grads`` — spec helper: gradients of FSDP-sharded params
+  should be produced reduce-scattered, not all-reduced; under pjit this is
+  expressed through the output shardings (grads inherit param specs), so
+  the helper just documents/validates that wiring.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.kahan import compensated_psum_scalar, kahan_step
+
+
+def deterministic_mean(mesh: Mesh, values: jax.Array, axis: str = "data",
+                       ) -> jax.Array:
+    """Bitwise-deterministic mean of per-device scalars over one mesh axis.
+
+    Gathers the (value, comp) pairs and folds them in device order with
+    two-sum — the distributed form of the paper's compensated reduction.
+    """
+    @partial(jax.shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(),
+             check_vma=False)  # fold result replicated by construction
+    def reduce(v):
+        s, c = kahan_step(jnp.zeros(()), jnp.zeros(()), v[0])
+        rs, rc = compensated_psum_scalar(s, c, axis)
+        return (rs + rc) / mesh.shape[axis]
+
+    return reduce(values)
+
+
+def expected_grad_spec(param_spec: P) -> P:
+    """Gradients share their parameter's sharding (ZeRO: the reduce-scatter
+    is implied by emitting grads in the param's FSDP-sharded spec)."""
+    return param_spec

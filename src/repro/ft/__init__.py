@@ -1,0 +1,8 @@
+"""Fault tolerance: failure injection, watchdog, restart supervision."""
+
+from repro.ft.failures import (  # noqa: F401
+    FailureInjector,
+    SimulatedFailure,
+    Watchdog,
+    run_with_restarts,
+)

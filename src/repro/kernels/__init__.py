@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's contribution IS a kernel (the Kahan-compensated dot), so this
+package carries the core artifacts:
+
+  kahan_dot.py    — compensated dot (modes: naive / kahan / dot2), the
+                    paper's Fig. 1 kernels with VPU-lane partial
+                    accumulators and the unroll knob.
+  kahan_sum.py    — single-stream variant (loss/metric accumulation).
+  kahan_matmul.py — MXU matmul with Kahan-compensated inter-K-tile
+                    accumulation (the TPU analog of the paper's
+                    FMA-as-ADD trick).
+  flash_attention.py — fused flash attention with Kahan-compensated
+                    online-softmax accumulators (the fix for the dominant
+                    roofline term found in EXPERIMENTS.md §Perf, with the
+                    paper's technique applied to the l/acc running sums).
+  ops.py          — jit'd public wrappers (interpret on CPU, Mosaic on TPU).
+  ref.py          — pure-jnp oracles with identical rounding sequences.
+"""
+
+from repro.kernels import ops  # noqa: F401

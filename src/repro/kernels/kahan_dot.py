@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for the (Kahan-)compensated dot product — paper Fig. 1b.
+
+TPU adaptation of the paper's SIMD kernels (DESIGN.md §2):
+
+* The SIMD lane structure is the VPU's native (8, 128) tile; the paper's
+  *unroll factor* U becomes the number of independent (8, 128) accumulator
+  groups — the block processed per grid step is ``(8*U, 128)`` and every
+  accumulator cell carries its own compensation term, exactly like the
+  partial-sum registers in the paper's unrolled AVX loop.
+* One *unit of work* = one VMEM block (the cache-line analog). HBM→VMEM
+  transfers are double-buffered by the Pallas pipeline — the ECM overlap
+  inversion described in DESIGN.md §7.
+* The compensated update is the paper's exact 4-add sequence; the final
+  cross-lane merge uses two-sum (robust to magnitude inversion), mirroring
+  the horizontal reduction after the paper's main loop.
+
+Modes:
+  naive — ``s += a*b``              (paper Fig. 1a, 2 flops/elem)
+  kahan — Fig. 1b                   (5 flops/elem)
+  dot2  — two_prod + two_sum        (Ogita et al., ~17 flops/elem; accuracy
+                                     ceiling used in the benchmark tables)
+
+The kernel returns the full (s, c) accumulator grids; the jit'd wrapper in
+``ops.py`` performs the deterministic compensated merge (cheap: one
+(8*U, 128) tree fold per *array*, not per block).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+SUBLANES = 8
+
+
+def _kahan_update(s, c, prod):
+    """The paper's compensated accumulation (4 adds; ``total = s + c``
+    convention — see core.kahan.kahan_step)."""
+    y = prod + c
+    t = s + y
+    c_new = y - (t - s)
+    return t, c_new
+
+
+def _dot2_update(s, c, x, y):
+    """two_prod + two_sum compensated update (fp32 Veltkamp split)."""
+    split = jnp.float32(4097.0)  # 2^12 + 1
+    p = x * y
+    xb = split * x
+    x_hi = xb - (xb - x)
+    x_lo = x - x_hi
+    yb = split * y
+    y_hi = yb - (yb - y)
+    y_lo = y - y_hi
+    ep = ((x_hi * y_hi - p) + x_hi * y_lo + x_lo * y_hi) + x_lo * y_lo
+    t = s + p
+    bp = t - s
+    es = (s - (t - bp)) + (p - bp)
+    return t, c + (ep + es)
+
+
+def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
+                grid_steps: int):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    s = s_acc[...]
+    c = c_acc[...]
+    if mode == "naive":
+        s = s + a * b
+    elif mode == "kahan":
+        s, c = _kahan_update(s, c, a * b)
+    elif mode == "dot2":
+        s, c = _dot2_update(s, c, a, b)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    s_acc[...] = s
+    c_acc[...] = c
+
+    @pl.when(g == grid_steps - 1)
+    def _emit():
+        s_out[...] = s_acc[...]
+        c_out[...] = c_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
+def dot_accumulators(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
+                     unroll: int = 8,
+                     interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Run the blocked dot kernel; returns (s, c) accumulator grids.
+
+    ``a``/``b`` must already be 1-D of equal length, padded by the caller to
+    a multiple of ``8 * unroll * 128``.
+    """
+    rows = SUBLANES * unroll
+    n = a.shape[0]
+    assert n % (rows * LANES) == 0, "caller must pad"
+    steps = n // (rows * LANES)
+    a2 = a.reshape(steps * rows, LANES)
+    b2 = b.reshape(steps * rows, LANES)
+
+    kernel = functools.partial(_dot_kernel, mode=mode, grid_steps=steps)
+    s, c = pl.pallas_call(
+        kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda g: (g, 0)),
+            pl.BlockSpec((rows, LANES), lambda g: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
+            pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a2, b2)
+    return s, c

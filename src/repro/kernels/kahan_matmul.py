@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: matmul with Kahan-compensated inter-tile accumulation.
+
+This is the TPU analog of the paper's "FMA with unit multiplicand" trick
+(§4): the MXU performs the per-tile multiply-(fp32-)accumulate — error-free
+enough *within* a (bm, bk)x(bk, bn) tile thanks to fp32 accumulation — and
+the VPU applies the paper's compensated update when folding successive
+K-tiles into the output accumulator. The long K-dimension reduction is where
+fp32 accumulation error grows with K; Kahan compensation bounds it
+independent of K (O(eps) instead of O(K*eps)).
+
+Use case in the framework: long-context attention score@V contractions and
+the vocab-dim logit matmul accumulate over K = seq_len or K = d_model
+tiles; ``kahan_matmul`` is the drop-in used by the compensated serving path.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics — sequential),
+M/N parallel. Accumulators (s, c) live in VMEM scratch, one pair per
+(bm, bn) output tile; they are re-initialized whenever k == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kahan_dot import _kahan_update
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref, s_acc, c_acc, *, mode: str,
+                   k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    prod = jnp.dot(a_ref[...].astype(jnp.float32),
+                   b_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    if mode == "naive":
+        s_acc[...] = s_acc[...] + prod
+    elif mode == "kahan":
+        s, c = _kahan_update(s_acc[...], c_acc[...], prod)
+        s_acc[...] = s
+        c_acc[...] = c
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    @pl.when(k == k_steps - 1)
+    def _emit():
+        out_ref[...] = s_acc[...] + c_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "mode", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
+           block_n: int = 256, block_k: int = 512, mode: str = "kahan",
+           interpret: bool = True) -> jax.Array:
+    """C = A @ B with compensated inter-tile accumulation. fp32 output.
+
+    Caller must pad M, N, K to multiples of the block sizes (zero padding
+    is exact for both modes).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    kernel = functools.partial(_matmul_kernel, mode=mode, k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for compensated array summation (single-stream dot).
+
+Same accumulator structure as ``kahan_dot`` with one input stream; used for
+loss/metric accumulation and as the building block of the compensated
+cross-entropy. See kahan_dot.py for the design notes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kahan_dot import LANES, SUBLANES, _kahan_update
+
+
+def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
+                grid_steps: int):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        s_acc[...] = jnp.zeros_like(s_acc)
+        c_acc[...] = jnp.zeros_like(c_acc)
+
+    x = x_ref[...].astype(jnp.float32)
+    s = s_acc[...]
+    c = c_acc[...]
+    if mode == "naive":
+        s = s + x
+    elif mode == "kahan":
+        s, c = _kahan_update(s, c, x)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    s_acc[...] = s
+    c_acc[...] = c
+
+    @pl.when(g == grid_steps - 1)
+    def _emit():
+        s_out[...] = s_acc[...]
+        c_out[...] = c_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
+def sum_accumulators(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
+                     interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Run the blocked sum kernel; returns (s, c) accumulator grids."""
+    rows = SUBLANES * unroll
+    n = x.shape[0]
+    assert n % (rows * LANES) == 0, "caller must pad"
+    steps = n // (rows * LANES)
+    x2 = x.reshape(steps * rows, LANES)
+
+    kernel = functools.partial(_sum_kernel, mode=mode, grid_steps=steps)
+    s, c = pl.pallas_call(
+        kernel,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda g: (g, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
+            pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2)
+    return s, c

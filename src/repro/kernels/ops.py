@@ -1,0 +1,95 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile to Mosaic; everywhere else they run in
+``interpret=True`` mode (the kernel body executes as jnp ops — identical
+rounding behavior, so oracles match bitwise). The framework's model code
+calls these wrappers; configs flip ``use_pallas`` to swap the jnp reference
+path in for lowering/AOT work (pallas_call does not lower for a CPU mesh).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kahan_dot as _kd
+from repro.kernels import kahan_matmul as _km
+from repro.kernels import kahan_sum as _ks
+from repro.kernels import ref as _ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad1d(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+def dot(a: jax.Array, b: jax.Array, *, mode: str = "kahan", unroll: int = 8,
+        interpret: bool | None = None) -> jax.Array:
+    """Compensated dot product of two 1-D arrays (fp32 result)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    a = jnp.ravel(a)
+    b = jnp.ravel(b)
+    block = _kd.SUBLANES * unroll * _kd.LANES
+    a = _pad1d(a, block)
+    b = _pad1d(b, block)
+    s, c = _kd.dot_accumulators(a, b, mode=mode, unroll=unroll,
+                                interpret=interpret)
+    return _ref.merge_accumulators(s, c)
+
+
+def asum(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
+         interpret: bool | None = None) -> jax.Array:
+    """Compensated sum of an array (fp32 result)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    x = jnp.ravel(x)
+    block = _kd.SUBLANES * unroll * _kd.LANES
+    x = _pad1d(x, block)
+    s, c = _ks.sum_accumulators(x, mode=mode, unroll=unroll,
+                                interpret=interpret)
+    return _ref.merge_accumulators(s, c)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
+           block_n: int = 256, block_k: int = 512, mode: str = "kahan",
+           interpret: bool | None = None) -> jax.Array:
+    """C = A @ B with compensated inter-K-tile accumulation (fp32 result).
+
+    Pads M/N/K to block multiples and slices the result back.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = a.shape
+    _, n = b.shape
+    block_m = min(block_m, _round_up(m, 8))
+    block_n = min(block_n, _round_up(n, 128))
+    block_k = min(block_k, _round_up(k, 128))
+    pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    out = _km.matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                     mode=mode, interpret=interpret)
+    return out[:m, :n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# Convenience: jnp-only fallbacks with identical semantics, used by model
+# code when lowering for non-TPU meshes (see repro.models.layers).
+dot_ref = functools.partial(_ref.dot_ref)
+sum_ref = functools.partial(_ref.sum_ref)
+matmul_ref = functools.partial(_ref.matmul_ref)

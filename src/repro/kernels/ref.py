@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors the *exact accumulation semantics* of its kernel so
+that interpret-mode kernel output can be compared with tight tolerances
+(ideally bitwise for the compensated variants, since both execute the same
+rounding sequence per lane).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kahan as K
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x
+
+
+def dot_ref(a: jax.Array, b: jax.Array, mode: str = "kahan",
+            rows: int = 8, lanes: int = 128) -> jax.Array:
+    """Oracle for the dot kernels.
+
+    Accumulation layout matches the kernel: data is viewed as
+    ``[steps, rows, lanes]``; a (rows, lanes) grid of accumulators is
+    Kahan-updated once per step; accumulators are then merged with two-sum
+    in the same tree order as the wrapper.
+    """
+    a = _pad_to(jnp.ravel(a).astype(jnp.float32), rows * lanes)
+    b = _pad_to(jnp.ravel(b).astype(jnp.float32), rows * lanes)
+    am = a.reshape(-1, rows, lanes)
+    bm = b.reshape(-1, rows, lanes)
+
+    if mode == "naive":
+        def body(carry, ab):
+            s, c = carry
+            x, y = ab
+            return (s + x * y, c), None
+    elif mode == "kahan":
+        def body(carry, ab):
+            s, c = carry
+            x, y = ab
+            s, c = K.kahan_step(s, c, x * y)
+            return (s, c), None
+    elif mode == "dot2":
+        def body(carry, ab):
+            s, c = carry
+            x, y = ab
+            p, ep = K.two_prod(x, y)
+            s, es = K.two_sum(s, p)
+            return (s, c + (ep + es)), None
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    init = (jnp.zeros((rows, lanes), jnp.float32),
+            jnp.zeros((rows, lanes), jnp.float32))
+    (s, c), _ = jax.lax.scan(body, init, (am, bm))
+    return merge_accumulators(s, c)
+
+
+def sum_ref(x: jax.Array, mode: str = "kahan",
+            rows: int = 8, lanes: int = 128) -> jax.Array:
+    """Oracle for the sum kernels (single-stream dot with b == 1)."""
+    x = _pad_to(jnp.ravel(x).astype(jnp.float32), rows * lanes)
+    xm = x.reshape(-1, rows, lanes)
+
+    if mode == "naive":
+        def body(carry, row):
+            s, c = carry
+            return (s + row, c), None
+    elif mode == "kahan":
+        def body(carry, row):
+            s, c = carry
+            s, c = K.kahan_step(s, c, row)
+            return (s, c), None
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    init = (jnp.zeros((rows, lanes), jnp.float32),
+            jnp.zeros((rows, lanes), jnp.float32))
+    (s, c), _ = jax.lax.scan(body, init, xm)
+    return merge_accumulators(s, c)
+
+
+def merge_accumulators(s: jax.Array, c: jax.Array) -> jax.Array:
+    """Deterministic compensated merge of a (rows, lanes) accumulator grid.
+
+    Same order as the kernel wrappers: fold rows pairwise (log2 tree), then
+    lanes pairwise, then collapse.
+    """
+    s = s.reshape(-1)
+    c = c.reshape(-1)
+    n = s.shape[0]
+    # pad to a power of two with exact zeros
+    p2 = 1 << (n - 1).bit_length()
+    if p2 != n:
+        s = jnp.concatenate([s, jnp.zeros((p2 - n,), s.dtype)])
+        c = jnp.concatenate([c, jnp.zeros((p2 - n,), c.dtype)])
+    while s.shape[0] > 1:
+        half = s.shape[0] // 2
+        s, c = K.kahan_combine(s[:half], c[:half], s[half:], c[half:])
+    return s[0] + c[0]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
+               mode: str = "kahan") -> jax.Array:
+    """Oracle for kahan_matmul: fp32 MXU-style per-tile products with
+    compensated accumulation across K tiles.
+
+    a: [M, K], b: [K, N] (any float dtype; compute fp32).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    pad = (-k) % bk
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((m, pad), a.dtype)], axis=1)
+        b = jnp.concatenate([b, jnp.zeros((pad, n), b.dtype)], axis=0)
+    kt = a.shape[1] // bk
+    a3 = a.reshape(m, kt, bk).transpose(1, 0, 2)  # [kt, M, bk]
+    b3 = b.reshape(kt, bk, n)                      # [kt, bk, N]
+
+    def body(carry, ab):
+        s, c = carry
+        at, bt = ab
+        prod = jnp.dot(at.astype(jnp.float32), bt.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        if mode == "kahan":
+            s, c = K.kahan_step(s, c, prod)
+        else:
+            s = s + prod
+        return (s, c), None
+
+    init = (jnp.zeros((m, n), jnp.float32), jnp.zeros((m, n), jnp.float32))
+    (s, c), _ = jax.lax.scan(body, init, (a3, b3))
+    return s + c
+
+
+def matmul_exact_f64(a: jax.Array, b: jax.Array) -> jax.Array:
+    """High-precision reference (numpy float64) for accuracy comparisons."""
+    import numpy as np
+
+    return np.asarray(a, np.float64) @ np.asarray(b, np.float64)

@@ -1,0 +1,44 @@
+"""Serving launcher: batched generation over the model-zoo API.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        [--batch 4] [--new-tokens 32]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.train import ServeConfig, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    server = Server(cfg, ServeConfig(temperature=args.temperature))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.vision is not None:
+        batch["vision_embeds"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.vision.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.encoder is not None:
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.encoder.n_frames, cfg.d_model)), jnp.float32)
+    out = server.generate(batch, args.new_tokens)
+    for i, row in enumerate(np.asarray(out)):
+        print(f"request {i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Abstract input construction for AOT lowering (the dry-run).
+
+Everything here is allocation-free: parameters, optimizer state, caches and
+batches are ShapeDtypeStructs obtained via ``jax.eval_shape`` tracing of
+the real init functions (logical sharding specs are captured through a
+closure box during the same trace — they are plain Python objects).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import build_model
+from repro.optim import AdamWConfig, opt_state_specs
+from repro.optim import init as opt_init
+from repro.train.trainer import TrainConfig, make_train_step
+from repro.train.serve import make_decode_step, make_prefill_step
+
+
+def abstract_params(model) -> Tuple[Any, Any]:
+    box: Dict[str, Any] = {}
+
+    def initp(k):
+        p, s = model.init(k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(initp, jax.random.key(0))
+    return shapes, box["specs"]
+
+
+def abstract_cache(model, batch_size: int, max_len: int) -> Tuple[Any, Any]:
+    box: Dict[str, Any] = {}
+
+    def initc():
+        c, s = model.init_cache(batch_size, max_len)
+        box["specs"] = s
+        return c
+
+    shapes = jax.eval_shape(initc)
+    return shapes, box["specs"]
+
+
+def abstract_opt_state(opt_cfg: AdamWConfig, params_shapes: Any,
+                       params_specs: Any) -> Tuple[Any, Any]:
+    shapes = jax.eval_shape(lambda p: opt_init(opt_cfg, p), params_shapes)
+    specs = opt_state_specs(params_specs, opt_cfg)
+    return shapes, specs
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one global batch of the given shape."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+        "loss_mask": sds((b, s), jnp.float32),
+    }
+    if cfg.vision is not None:
+        batch["vision_embeds"] = sds((b, cfg.vision.n_patches, cfg.d_model),
+                                     jnp.float32)
+    if cfg.encoder is not None:
+        batch["frames"] = sds((b, cfg.encoder.n_frames, cfg.d_model),
+                              jnp.float32)
+    return batch
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch x shape) cell."""
+
+    step_fn: Any                 # callable to jit
+    args: Tuple[Any, ...]        # abstract args (SDS trees)
+    arg_specs: Tuple[Any, ...]   # logical spec trees (None = replicated)
+    out_specs: Optional[Tuple[Any, ...]]
+    model_flops: float           # useful-FLOPs accounting for the cell
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec,
+               tc: Optional[TrainConfig] = None) -> Cell:
+    model = build_model(cfg)
+    params_sh, params_specs = abstract_params(model)
+    n = cfg.param_counts()
+    tokens = shape.global_batch * shape.seq_len
+
+    if shape.kind == "train":
+        tc = tc or TrainConfig(microbatches=1)
+        opt_sh, opt_specs = abstract_opt_state(tc.opt, params_sh,
+                                               params_specs)
+        batch = batch_struct(cfg, shape)
+        step = make_train_step(model, cfg, tc)
+        return Cell(step_fn=step,
+                    args=(params_sh, opt_sh, batch),
+                    arg_specs=(params_specs, opt_specs, "batch"),
+                    out_specs=(params_specs, opt_specs, None),
+                    model_flops=6.0 * n["active"] * tokens)
+
+    if shape.kind == "prefill":
+        cache_sh, cache_specs = abstract_cache(model, shape.global_batch,
+                                               shape.seq_len)
+        batch = batch_struct(cfg, shape)
+        step = make_prefill_step(model)
+        return Cell(step_fn=step,
+                    args=(params_sh, batch, cache_sh),
+                    arg_specs=(params_specs, "batch", cache_specs),
+                    out_specs=(None, cache_specs),
+                    model_flops=2.0 * n["active"] * tokens)
+
+    # decode: one new token against a cache of seq_len
+    cache_sh, cache_specs = abstract_cache(model, shape.global_batch,
+                                           shape.seq_len)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = make_decode_step(model)
+    return Cell(step_fn=step,
+                args=(params_sh, cache_sh, tok, pos),
+                arg_specs=(params_specs, cache_specs, "tokens1d", None),
+                out_specs=(None, cache_specs),
+                model_flops=2.0 * n["active"] * shape.global_batch)

@@ -1,0 +1,3 @@
+"""Model zoo: functional layers + per-family LM assemblies."""
+
+from repro.models.model_zoo import build_model  # noqa: F401

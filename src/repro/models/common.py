@@ -1,0 +1,151 @@
+"""Shared model-assembly machinery.
+
+* ``stack_init`` — vmap a per-layer init over L keys -> params stacked with a
+  leading "layers" axis (never sharded), ready for ``lax.scan`` over layers
+  (keeps the HLO size O(1) in depth — essential for 48-layer × 512-device
+  dry-run compiles on one CPU).
+* ``chunked_ce_loss`` — the vocab matmul + cross-entropy evaluated in
+  sequence chunks under ``jax.checkpoint`` with KAHAN-COMPENSATED chunk
+  accumulation (paper technique, applied to the longest fp32 reduction in
+  training: the per-token loss sum over ~1M tokens).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.kahan import kahan_step
+from repro.models.layers import _dtype
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scan-over-layers) parameter trees
+# ---------------------------------------------------------------------------
+
+def stack_init(key, n: int, init_fn: Callable) -> Tuple[Params, Params]:
+    """Run ``init_fn(key_i)`` for n layer keys, stacking results on axis 0."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, spec = init_fn(keys[0])  # structure only
+    spec = stack_specs(spec)
+    return params, spec
+
+
+def stack_specs(spec_tree: Params) -> Params:
+    """Prepend an unsharded "layers" axis to every PartitionSpec leaf."""
+    return jax.tree.map(lambda s: P(None, *s),
+                        spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Compensated chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(x: jax.Array, head_w: jax.Array, labels: jax.Array,
+                    mask: jax.Array, cfg: ArchConfig,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over a vocab-sharded head, chunked over sequence.
+
+    x: [B,S,D] final hidden states; head_w: [D, V_padded]; labels [B,S]
+    int32; mask [B,S] {0,1}. Returns (sum_loss, sum_count) — caller divides
+    (the division is deferred so microbatch accumulation stays compensated).
+
+    Each chunk's logits ([B,chunk,V]) exist only inside a jax.checkpoint
+    region — the backward pass recomputes them, bounding live memory at
+    O(B*chunk*V / n_model_shards). Chunk partial losses fold into a Kahan
+    accumulator when cfg.kahan_loss (the paper's kernel, applied at the
+    loss level).
+    """
+    b, s, d = x.shape
+    chunk = min(cfg.loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = x.shape[1] // chunk
+
+    xs = x.reshape(b, nch, chunk, d).swapaxes(0, 1)          # [nch,B,c,D]
+    ls = labels.reshape(b, nch, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, nch, chunk).swapaxes(0, 1)
+
+    v_pad = head_w.shape[-1]
+    vocab_bias = jnp.where(jnp.arange(v_pad) < cfg.vocab_size, 0.0,
+                           -1e30).astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, mc):
+        logits = jax.lax.dot_general(
+            xc, head_w.astype(xc.dtype),
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [B,c,V] fp32
+        logits = logits + vocab_bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None],
+                                   axis=-1)[..., 0]
+        mcf = mc.astype(jnp.float32)
+        return jnp.sum((lse - gold) * mcf), jnp.sum(mcf)
+
+    def body(carry, inp):
+        s_acc, c_acc, cnt = carry
+        xc, lc, mc = inp
+        part, n = chunk_loss(xc, lc, mc)
+        if cfg.kahan_loss:
+            s_acc, c_acc = kahan_step(s_acc, c_acc, part)
+        else:
+            s_acc = s_acc + part
+        return (s_acc, c_acc, cnt + n), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32))
+    (s_acc, c_acc, cnt), _ = jax.lax.scan(body, init, (xs, ls, ms))
+    return s_acc + c_acc, cnt
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head helpers
+# ---------------------------------------------------------------------------
+
+def lm_head_weight(params: Params, cfg: ArchConfig) -> jax.Array:
+    """[D, V_padded] head weight (transposed embed table when tied)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+def decode_logits(x_last: jax.Array, params: Params, cfg: ArchConfig,
+                  ) -> jax.Array:
+    """Logits for a single-position hidden state [B,1,D] -> [B,V_padded]."""
+    w = lm_head_weight(params, cfg)
+    logits = jax.lax.dot_general(
+        x_last[:, 0, :], w.astype(x_last.dtype),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    v_pad = w.shape[-1]
+    return logits + jnp.where(jnp.arange(v_pad) < cfg.vocab_size, 0.0, -1e30)
+
+
+def init_embed_and_head(key, cfg: ArchConfig) -> Tuple[Params, Params]:
+    from repro.models.layers import embed_init, dense_init, norm_init
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg.param_dtype)
+    params: Params = {}
+    specs: Params = {}
+    pe, se = embed_init(k1, cfg.padded_vocab, cfg.d_model, dt)
+    params["embed"], specs["embed"] = pe, se
+    pn, sn = norm_init(cfg.d_model, cfg.norm, dt)
+    params["final_norm"], specs["final_norm"] = pn, sn
+    if not cfg.tie_embeddings:
+        ph, sh = dense_init(k2, cfg.d_model, cfg.padded_vocab, dtype=dt,
+                            spec_in="embed", spec_out="vocab", scale=0.02)
+        params["head"], specs["head"] = ph, sh
+    return params, specs

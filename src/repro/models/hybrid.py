@@ -1,0 +1,219 @@
+"""Hymba-style hybrid LM: PARALLEL attention + mamba heads per layer.
+
+Layer = pre-norm -> {attention(window or global), selective SSM} on the
+same normed input -> per-path RMSNorm -> mean -> residual; then a standard
+pre-norm MLP. Sliding-window layers use RING-BUFFER KV caches of length
+``window`` (decode memory O(window), which is what makes long_500k
+runnable); the global-attention layers ({0, mid, last}) keep full caches.
+
+The stack lowers as singles for the global layers and scans for the SWA
+runs between them — window size stays a static Python int per segment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    Params,
+    chunked_ce_loss,
+    decode_logits,
+    init_embed_and_head,
+    lm_head_weight,
+    stack_init,
+)
+from repro.models.layers import (
+    AttnStatic,
+    _dtype,
+    attention,
+    attn_init,
+    embed_lookup,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+)
+from repro.models.ssm import ssm_apply, ssm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class HSegment:
+    name: str
+    n_layers: int
+    window: int      # 0 = global attention
+    scan: bool
+
+
+def plan_hymba_segments(cfg: ArchConfig) -> List[HSegment]:
+    segs: List[HSegment] = []
+    globals_ = set(cfg.global_attn_layers)
+    i = 0
+    while i < cfg.n_layers:
+        if i in globals_:
+            segs.append(HSegment(f"global_{i}", 1, 0, False))
+            i += 1
+        else:
+            j = i
+            while j < cfg.n_layers and j not in globals_:
+                j += 1
+            segs.append(HSegment(f"swa_{i}_{j - 1}", j - i,
+                                 cfg.sliding_window, True))
+            i = j
+    return segs
+
+
+class HymbaLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.st = AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                             cfg.rope_theta, cfg.qkv_bias,
+                             _dtype(cfg.compute_dtype))
+        self.segments = plan_hymba_segments(cfg)
+
+    def _block_init(self):
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+
+        def init_one(key):
+            ks = jax.random.split(key, 3)
+            p: Params = {}
+            s: Params = {}
+            p["ln1"], s["ln1"] = norm_init(cfg.d_model, cfg.norm, dt)
+            p["attn"], s["attn"] = attn_init(ks[0], cfg)
+            p["ssm"], s["ssm"] = ssm_init(ks[1], cfg)
+            p["na"], s["na"] = norm_init(cfg.d_model, "rmsnorm", dt)
+            p["ns"], s["ns"] = norm_init(cfg.d_model, "rmsnorm", dt)
+            p["ln2"], s["ln2"] = norm_init(cfg.d_model, cfg.norm, dt)
+            p["mlp"], s["mlp"] = mlp_init(ks[2], cfg)
+            return p, s
+
+        return init_one
+
+    def init(self, key) -> Tuple[Params, Params]:
+        keys = jax.random.split(key, 1 + len(self.segments))
+        params, specs = init_embed_and_head(keys[0], self.cfg)
+        init_fn = self._block_init()
+        for i, seg in enumerate(self.segments):
+            if seg.scan:
+                p, s = stack_init(keys[1 + i], seg.n_layers, init_fn)
+            else:
+                p, s = init_fn(keys[1 + i])
+            params[seg.name] = p
+            specs[seg.name] = s
+        return params, specs
+
+    def _apply_block(self, p: Params, x: jax.Array, *, window: int, q_pos,
+                     cache=None, cache_index=None):
+        cfg = self.cfg
+        a_in = norm_apply(p["ln1"], x, cfg.norm)
+        kv_cache = cache["kv"] if cache is not None else None
+        ssm_cache = cache["ssm"] if cache is not None else None
+        attn_out, new_kv = attention(p["attn"], self.st, a_in, q_pos=q_pos,
+                                     window=window, cache=kv_cache,
+                                     cache_index=cache_index)
+        ssm_out, new_ssm = ssm_apply(p["ssm"], cfg, a_in, cache=ssm_cache)
+        fused = 0.5 * (norm_apply(p["na"], attn_out, "rmsnorm")
+                       + norm_apply(p["ns"], ssm_out, "rmsnorm"))
+        x = x + fused
+        m_in = norm_apply(p["ln2"], x, cfg.norm)
+        x = x + mlp_apply(p["mlp"], cfg, m_in)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"kv": new_kv, "ssm": new_ssm}
+        return x, new_cache
+
+    def _run(self, params, x, *, q_pos, caches=None, cache_index=None,
+             remat=False):
+        new_caches: Dict[str, Any] = {}
+        for seg in self.segments:
+            p_seg = params[seg.name]
+            c_seg = caches.get(seg.name) if caches is not None else None
+
+            def apply_one(p_l, x, c_l, _w=seg.window):
+                return self._apply_block(p_l, x, window=_w, q_pos=q_pos,
+                                         cache=c_l, cache_index=cache_index)
+
+            if remat:
+                apply_one = jax.checkpoint(apply_one)
+            if seg.scan:
+                def body(x, inp):
+                    p_l, c_l = inp
+                    x, nc = apply_one(p_l, x, c_l)
+                    return x, nc
+
+                x, nc = jax.lax.scan(body, x, (p_seg, c_seg))
+            else:
+                x, nc = apply_one(p_seg, x, c_seg)
+            if caches is not None:
+                new_caches[seg.name] = nc
+        return x, new_caches
+
+    # ---------------------------------------------------------------- steps
+    def loss(self, params, batch):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        from repro.distributed.sharding import constrain
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        x = constrain(x, "batch", "seq", None)
+        q_pos = jnp.arange(x.shape[1])
+        x, _ = self._run(params, x, q_pos=q_pos, remat=True)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        sum_loss, cnt = chunked_ce_loss(x, lm_head_weight(params, cfg),
+                                        batch["labels"], batch["loss_mask"],
+                                        cfg)
+        loss = sum_loss / jnp.maximum(cnt, 1.0)
+        return loss, {"ce_loss": loss, "tokens": cnt}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        d_in = cfg.ssm.expand * cfg.d_model
+        kvspec = "kv_heads" if cfg.n_kv_heads % 16 == 0 else None
+
+        def one(window):
+            s_alloc = window if window > 0 else max_len
+            kv = (jnp.zeros((batch_size, s_alloc, cfg.n_kv_heads,
+                             cfg.head_dim), cd),) * 2
+            kv_s = (P("batch", "kv_seq", kvspec, None),) * 2
+            ssm = (jnp.zeros((batch_size, d_in, cfg.ssm.d_state),
+                             jnp.float32),
+                   jnp.zeros((batch_size, cfg.ssm.d_conv - 1, d_in), cd))
+            ssm_s = (P("batch", "mlp", None), P("batch", None, "mlp"))
+            return ({"kv": kv, "ssm": ssm}, {"kv": kv_s, "ssm": ssm_s})
+
+        caches, specs = {}, {}
+        for seg in self.segments:
+            c, s = one(seg.window)
+            if seg.scan:
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None],
+                                               (seg.n_layers, *a.shape)), c)
+                s = jax.tree.map(lambda sp: P(None, *sp), s,
+                                 is_leaf=lambda sp: isinstance(sp, P))
+            caches[seg.name] = c
+            specs[seg.name] = s
+        return caches, specs
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        q_pos = jnp.arange(x.shape[1])
+        x, new_caches = self._run(params, x, q_pos=q_pos, caches=caches)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return decode_logits(x[:, -1:, :], params, cfg), new_caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = embed_lookup(params["embed"], tokens[:, None], cd)
+        x, new_caches = self._run(params, x, q_pos=pos[None], caches=caches,
+                                  cache_index=pos)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return decode_logits(x, params, cfg), new_caches

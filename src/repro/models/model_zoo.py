@@ -1,0 +1,27 @@
+"""Model factory: ArchConfig -> model instance (duck-typed API).
+
+Every model exposes:
+    init(key)                               -> (params, specs)
+    loss(params, batch)                     -> (scalar, metrics)
+    init_cache(batch_size, max_len)         -> (cache, cache_specs)
+    prefill(params, batch, cache)           -> (last logits, cache)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HymbaLM
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm_lm import XLSTMLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.xlstm is not None:
+        return XLSTMLM(cfg)
+    if cfg.encoder is not None:
+        return EncDecLM(cfg)
+    if cfg.ssm is not None:
+        return HymbaLM(cfg)
+    return TransformerLM(cfg)

@@ -1,0 +1,174 @@
+"""Mamba-style selective SSM — the SSM half of hymba's parallel heads.
+
+Training/prefill uses a *chunked* associative scan: the [B, L, dI, dS]
+decay/input tensors are materialized only per chunk (``cfg.ssm.chunk``),
+with the inter-chunk state h carried by a lax.scan — the standard
+memory-bounded JAX formulation. Decode is the O(1) recurrent step with the
+(h, conv window) state living in the serving cache.
+
+Sharding: the inner dim dI maps to the logical "mlp" axis (-> mesh
+"model"); the state dim dS (16) stays local. x_proj contracts a sharded
+dim (partial-sum all-reduce, negligible — dt_rank+2*dS columns).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dtype, _init_normal
+
+Params = Dict[str, Any]
+
+
+def ssm_init(key, cfg: ArchConfig) -> Tuple[Params, Params]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = s.dt_rank or -(-d // 16)
+    dt = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+
+    p = {
+        "in_x": {"w": _init_normal(ks[0], (d, d_in), d ** -0.5, dt)},
+        "in_z": {"w": _init_normal(ks[1], (d, d_in), d ** -0.5, dt)},
+        "conv_w": _init_normal(ks[2], (s.d_conv, d_in), s.d_conv ** -0.5, dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": {"w": _init_normal(ks[3], (d_in, dt_rank + 2 * s.d_state),
+                                     d_in ** -0.5, dt)},
+        "dt_proj": {"w": _init_normal(ks[4], (dt_rank, d_in),
+                                      dt_rank ** -0.5, dt),
+                    "b": jnp.log(jnp.expm1(
+                        jnp.full((d_in,), 0.01))).astype(dt)},
+        # S4D-real initialization: A = -(1..dS) per channel
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+            (d_in, s.d_state))).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out": {"w": _init_normal(ks[5], (d_in, d),
+                                  d_in ** -0.5 / (2 * cfg.n_layers) ** 0.5, dt)},
+    }
+    specs = {
+        "in_x": {"w": P("embed", "mlp")},
+        "in_z": {"w": P("embed", "mlp")},
+        "conv_w": P(None, "mlp"),
+        "conv_b": P("mlp"),
+        "x_proj": {"w": P("mlp", None)},
+        "dt_proj": {"w": P(None, "mlp"), "b": P("mlp")},
+        "A_log": P("mlp", None),
+        "D": P("mlp"),
+        "out": {"w": P("mlp", "embed")},
+    }
+    return p, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. x: [B,S,dI], w: [k,dI]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k static and tiny (4): unrolled window sum
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssm_chunk(h0, chunk_inputs):
+    """One chunk of the selective scan. h0: [B,dI,dS] fp32."""
+    a, bx, c, du = chunk_inputs  # a,bx: [B,L,dI,dS]; c: [B,L,dS]; du: [B,L,dI]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = b_cum + a_cum * h0[:, None]                 # [B,L,dI,dS]
+    y = jnp.einsum("blds,bls->bld", h, c) + du
+    return h[:, -1], y
+
+
+def ssm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+              cache: Tuple[jax.Array, jax.Array] | None = None,
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array] | None]:
+    """x: [B,S,D]. cache (decode only): (h [B,dI,dS] fp32, conv_buf
+    [B,k-1,dI]). Returns (y [B,S,D], new_cache)."""
+    s_cfg = cfg.ssm
+    cd = _dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    d_in = s_cfg.expand * cfg.d_model
+    dt_rank = s_cfg.dt_rank or -(-cfg.d_model // 16)
+
+    xc = x.astype(cd)
+    x_in = jnp.einsum("bsd,di->bsi", xc, p["in_x"]["w"].astype(cd))
+    z = jnp.einsum("bsd,di->bsi", xc, p["in_z"]["w"].astype(cd))
+
+    new_cache = None
+    if cache is not None and s == 1:  # decode step
+        h_prev, conv_buf = cache
+        window = jnp.concatenate([conv_buf, x_in], axis=1)  # [B,k,dI]
+        u = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+        u = jax.nn.silu(u)[:, None, :]                       # [B,1,dI]
+        new_conv_buf = window[:, 1:]
+    else:
+        u = jax.nn.silu(_causal_conv(x_in, p["conv_w"].astype(cd),
+                                     p["conv_b"].astype(cd)).astype(jnp.float32))
+
+    u = u.astype(jnp.float32)
+    dbc = jnp.einsum("bsi,ir->bsr", u.astype(cd), p["x_proj"]["w"].astype(cd))
+    dbc = dbc.astype(jnp.float32)
+    dt_in = dbc[..., :dt_rank]
+    b_ssm = dbc[..., dt_rank:dt_rank + s_cfg.d_state]
+    c_ssm = dbc[..., dt_rank + s_cfg.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]["w"].astype(jnp.float32))
+        + p["dt_proj"]["b"].astype(jnp.float32))             # [B,S,dI]
+
+    a_mat = -jnp.exp(p["A_log"])                             # [dI,dS]
+    decay = jnp.exp(dt[..., None] * a_mat)                   # [B,S,dI,dS]
+    drive = (dt * u)[..., None] * b_ssm[:, :, None, :]       # [B,S,dI,dS]
+    du = p["D"] * u
+
+    if cache is not None and s == 1:
+        h = decay[:, 0] * h_prev + drive[:, 0]               # [B,dI,dS]
+        y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0])[:, None, :] + du
+        new_cache = (h, new_conv_buf)
+    else:
+        # chunked scan over the sequence
+        chunk = min(s_cfg.chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                            constant_values=1.0)
+            drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_ssm = jnp.pad(c_ssm, ((0, 0), (0, pad), (0, 0)))
+            du = jnp.pad(du, ((0, 0), (0, pad), (0, 0)))
+        nchunks = decay.shape[1] // chunk
+
+        def to_chunks(t):
+            return t.reshape(b, nchunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+        h0 = jnp.zeros((b, d_in, s_cfg.d_state), jnp.float32)
+        if cache is not None:  # prefill continuing from a state
+            h0 = cache[0]
+
+        def body(h, inp):
+            h, y = _ssm_chunk(h, inp)
+            return h, y
+
+        h_last, ys = jax.lax.scan(
+            body, h0, (to_chunks(decay), to_chunks(drive),
+                       to_chunks(c_ssm), to_chunks(du)))
+        y = ys.swapaxes(0, 1).reshape(b, nchunks * chunk, d_in)[:, :s]
+        if cache is not None:
+            # conv window state for subsequent decode
+            k = s_cfg.d_conv
+            conv_buf = x_in[:, -(k - 1):, :]
+            new_cache = (h_last, conv_buf)
+
+    y = y.astype(cd) * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bsi,id->bsd", y, p["out"]["w"].astype(cd)), new_cache

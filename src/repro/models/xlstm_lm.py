@@ -1,0 +1,161 @@
+"""xLSTM LM assembly: scan over groups of (slstm_every-1) mLSTM + 1 sLSTM.
+
+48 blocks at 7:1 -> 6 scanned groups; params stacked [G, 7, ...] for the
+mLSTMs (inner scan) and [G, ...] for the sLSTMs. Residual connections wrap
+every block (the blocks are pre-norm internally).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    Params,
+    chunked_ce_loss,
+    decode_logits,
+    init_embed_and_head,
+    lm_head_weight,
+    stack_init,
+    stack_specs,
+)
+from repro.models.layers import _dtype, embed_lookup, norm_apply
+from repro.models.xlstm import (
+    mlstm_apply,
+    mlstm_init,
+    slstm_apply,
+    slstm_init,
+)
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        xl = cfg.xlstm
+        assert cfg.n_layers % xl.slstm_every == 0, \
+            "n_layers must be a multiple of slstm_every"
+        self.n_groups = cfg.n_layers // xl.slstm_every
+        self.m_per_group = xl.slstm_every - 1
+
+    def init(self, key) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        k0, k1, k2 = jax.random.split(key, 3)
+        params, specs = init_embed_and_head(k0, cfg)
+
+        def group_init(kg):
+            ka, kb = jax.random.split(kg)
+            pm, sm = stack_init(ka, self.m_per_group,
+                                lambda k: mlstm_init(k, cfg))
+            ps, ss = slstm_init(kb, cfg)
+            return {"mlstm": pm, "slstm": ps}, {"mlstm": sm, "slstm": ss}
+
+        del k1
+        keys = jax.random.split(k2, self.n_groups)
+        pgs = jax.vmap(lambda k: group_init(k)[0])(keys)
+        _, sgs = group_init(keys[0])
+        params["groups"] = pgs
+        specs["groups"] = stack_specs(sgs)
+        return params, specs
+
+    def _group_apply(self, p_g, x, caches=None):
+        """One group: m_per_group mLSTM blocks then one sLSTM block."""
+        cfg = self.cfg
+        m_caches = caches["mlstm"] if caches is not None else None
+        s_cache = caches["slstm"] if caches is not None else None
+
+        def m_body(x, inp):
+            p_l, c_l = inp
+            out, nc = mlstm_apply(p_l, cfg, x, cache=c_l)
+            return x + out, nc
+
+        x, new_m = jax.lax.scan(m_body, x, (p_g["mlstm"], m_caches))
+        out, new_s = slstm_apply(p_g["slstm"], cfg, x, cache=s_cache)
+        x = x + out
+        new_c = None
+        if caches is not None:
+            new_c = {"mlstm": new_m, "slstm": new_s}
+        return x, new_c
+
+    def _run(self, params, x, caches=None, remat=False):
+        apply_g = self._group_apply
+        if remat:
+            apply_g = jax.checkpoint(lambda p, x, c: self._group_apply(p, x, c))
+
+        def body(x, inp):
+            p_g, c_g = inp
+            x, nc = apply_g(p_g, x, c_g)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(body, x, (params["groups"], caches))
+        return x, new_caches
+
+    # ----------------------------------------------------------------- steps
+    def loss(self, params, batch):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        from repro.distributed.sharding import constrain
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        x = constrain(x, "batch", "seq", None)
+        x, _ = self._run(params, x, remat=True)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        sum_loss, cnt = chunked_ce_loss(x, lm_head_weight(params, cfg),
+                                        batch["labels"], batch["loss_mask"],
+                                        cfg)
+        loss = sum_loss / jnp.maximum(cnt, 1.0)
+        return loss, {"ce_loss": loss, "tokens": cnt}
+
+    def init_cache(self, batch_size: int, max_len: int):
+        """xLSTM state is O(1) in sequence length — max_len is ignored
+        (that is the point of the architecture for long_500k)."""
+        cfg = self.cfg
+        xl = cfg.xlstm
+        cd = _dtype(cfg.compute_dtype)
+        d = cfg.d_model
+        h = cfg.n_heads
+        d_in = int(xl.mlstm_proj_factor * d)
+        d_qk = int(xl.mlstm_qk_factor * d_in)
+        kq, kv = d_qk // h, d_in // h
+        g, m = self.n_groups, self.m_per_group
+
+        m_cache = (
+            jnp.zeros((g, m, batch_size, h, kq, kv), jnp.float32),
+            jnp.zeros((g, m, batch_size, h, kq), jnp.float32),
+            jnp.full((g, m, batch_size, h), -1e30, jnp.float32),
+            jnp.zeros((g, m, batch_size, xl.conv_kernel - 1, d_in), cd),
+        )
+        m_spec = (P(None, None, "batch", None, None, "xl_inner"),
+                  P(None, None, "batch", None, None),
+                  P(None, None, "batch", None),
+                  P(None, None, "batch", None, "xl_inner"))
+        s_cache = tuple(jnp.zeros((g, batch_size, d), jnp.float32)
+                        for _ in range(3)) + (
+            jnp.zeros((g, batch_size, d), jnp.float32),)
+        # (c, n, m, h); m must start at -inf for exp-gating stability
+        s_cache = (s_cache[0], s_cache[1],
+                   jnp.full((g, batch_size, d), -1e30, jnp.float32),
+                   s_cache[3])
+        s_spec = (P(None, "batch", None),) * 4
+        caches = {"mlstm": m_cache, "slstm": s_cache}
+        specs = {"mlstm": m_spec, "slstm": s_spec}
+        return caches, specs
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = embed_lookup(params["embed"], batch["tokens"], cd)
+        x, new_caches = self._run(params, x, caches=caches)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return decode_logits(x[:, -1:, :], params, cfg), new_caches
+
+    def decode_step(self, params, caches, tokens, pos):
+        del pos  # state is positionless
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = embed_lookup(params["embed"], tokens[:, None], cd)
+        x, new_caches = self._run(params, x, caches=caches)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return decode_logits(x, params, cfg), new_caches

@@ -1,0 +1,11 @@
+"""Optimizers: AdamW + Kahan-compensated AdamW, schedules."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    OptState,
+    apply_update,
+    global_norm,
+    init,
+    opt_state_specs,
+)
+from repro.optim import schedule  # noqa: F401

@@ -1,0 +1,3 @@
+"""Performance analysis: roofline extraction from compiled artifacts."""
+
+from repro.perf import roofline  # noqa: F401

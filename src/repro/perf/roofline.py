@@ -1,0 +1,151 @@
+"""Roofline-term extraction from compiled/lowered artifacts.
+
+Three terms per (arch x shape x mesh) cell — DESIGN.md §6:
+
+    compute    = HLO_FLOPs   / (chips * 197e12)        [s]
+    memory     = HLO_bytes   / (chips * 819e9)         [s]
+    collective = coll_bytes  / (chips * 3 * 50e9)      [s]
+
+``cost_analysis`` provides per-device FLOPs / bytes-accessed; collective
+bytes are parsed from the HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op we sum the OPERAND
+sizes (resolved from inline operand types, falling back to the defining
+op's result shape), per the task brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.core.ecm import TPU_V5E, RooflineTerms, TPUMachine
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s+"
+                     r"([\w\-]+)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] group in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind operand bytes (per device), summed over the
+    module. ``-start`` fusion variants count once (the ``-done`` op has no
+    operands worth double counting)."""
+    # name -> result-shape bytes (for operand refs without inline types)
+    sizes: Dict[str, int] = {}
+    for m in re.finditer(r"%([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^)=\n]*)",
+                         hlo_text):
+        sizes[m.group(1)] = _shape_bytes(m.group(2))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*\(?[a-z0-9]+\[.*?\s([\w\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.removesuffix("-start")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        # operand section: inside the first (...) after the op name
+        paren = line.split(op + "(", 1)[1]
+        # inline operand types?
+        inline = _shape_bytes(paren.split("),", 1)[0].split(") ", 1)[0])
+        if inline:
+            out[base] += inline
+        else:
+            for ref in re.findall(r"%([\w.\-]+)", paren):
+                out[base] += sizes.get(ref, 0)
+    return out
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    peak_memory_bytes: Optional[float]
+    model_flops: float          # 6*N*D (train) or 2*N*D (serve), global
+    machine: str = "v5e"
+
+    def terms(self) -> RooflineTerms:
+        m = TPU_V5E
+        return RooflineTerms(
+            flops=self.flops_per_device * self.chips,
+            hbm_bytes=self.bytes_per_device * self.chips,
+            collective_bytes=self.collective_bytes_per_device * self.chips,
+            chips=self.chips, machine=m)
+
+    def to_json(self) -> Dict:
+        t = self.terms()
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": t.compute_s,
+            "memory_s": t.memory_s,
+            "collective_s": t.collective_s,
+            "dominant": t.dominant,
+            "step_time_s": t.step_time_s,
+            "useful_flops_ratio": (self.model_flops / t.flops
+                                   if t.flops else 0.0),
+            "roofline_fraction": t.roofline_fraction(self.model_flops),
+        }
+
+
+def analyze(compiled, lowered_text: str, *, arch: str, shape: str,
+            mesh_name: str, chips: int, model_flops: float) -> CellReport:
+    from repro.perf import hlo_analysis
+
+    # trip-count-corrected per-device totals (see hlo_analysis docstring for
+    # why raw cost_analysis undercounts scan bodies)
+    totals = hlo_analysis.analyze_text(lowered_text)
+    flops = totals.flops
+    byts = totals.bytes
+    coll = {k: int(v) for k, v in totals.coll.items()}
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0)
+                     + getattr(ma, "argument_size_in_bytes", 0)
+                     + getattr(ma, "output_size_in_bytes", 0)
+                     - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return CellReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=float(sum(coll.values())),
+        collective_breakdown=coll, peak_memory_bytes=peak,
+        model_flops=model_flops)

@@ -1,0 +1,4 @@
+"""Training / serving drivers."""
+
+from repro.train.trainer import TrainConfig, Trainer, make_train_step  # noqa: F401
+from repro.train.serve import ServeConfig, Server, make_decode_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,73 @@
+"""Batched serving loop: prefill + decode with KV caches.
+
+``Server`` is the single-host driver used by examples/serve_batched.py and
+the serving integration tests; ``make_prefill_step`` / ``make_decode_step``
+are the jit-able functions the dry-run lowers for the decode_*/prefill_*
+shape cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0     # 0 = greedy
+
+
+class Server:
+    """Greedy/temperature batched decoder over the model zoo API."""
+
+    def __init__(self, cfg: ArchConfig, sc: ServeConfig, seed: int = 0):
+        self.cfg = cfg
+        self.sc = sc
+        self.model = build_model(cfg)
+        self.params, _ = self.model.init(jax.random.key(seed))
+        self._prefill = jax.jit(make_prefill_step(self.model))
+        self._decode = jax.jit(make_decode_step(self.model),
+                               donate_argnums=(1,))
+
+    def generate(self, batch: Dict[str, jax.Array], n_new: int,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
+        """batch: model inputs incl. "tokens" [B, S]. Returns [B, n_new]."""
+        b, s = batch["tokens"].shape
+        cache, _ = self.model.init_cache(b, s + n_new)
+        logits, cache = self._prefill(self.params, batch, cache)
+        outs = []
+        tok = self._sample(logits, key, 0)
+        for i in range(n_new):
+            outs.append(tok)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.asarray(s + i))
+            tok = self._sample(logits, key, i + 1)
+        return jnp.stack(outs, axis=1)
+
+    def _sample(self, logits: jax.Array, key, i: int) -> jax.Array:
+        if self.sc.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sub = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            sub, logits / self.sc.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,81 @@
+"""Checkpoint tests: atomicity, keep-N, bf16 round-trip, elastic reshard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 16)),
+                                    jnp.float32),
+                   "e": jnp.asarray(rng.standard_normal((32,)),
+                                    jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 7, tree, extras={"data": {"step": 7}})
+    restored, step, extras = ckpt.restore(str(tmp_path), tree)
+    assert step == 7 and extras["data"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_n_prunes(tmp_path):
+    tree = _tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    # simulate a crash mid-write: directory without the commit marker
+    os.makedirs(tmp_path / "step_00000002")
+    (tmp_path / "step_00000002" / "arrays.npz").write_bytes(b"junk")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, step, _ = ckpt.restore(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = _tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    bad = {"params": {"w": jnp.zeros((8, 17)), "e": tree["params"]["e"]},
+           "step": tree["step"]}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_elastic_reshard_on_load(tmp_path):
+    """Save unsharded, restore onto an explicit NamedSharding of a local
+    mesh — the elasticity path (mesh shape can differ arbitrarily between
+    save and load)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = _tree()
+    ckpt.save(str(tmp_path), 3, tree)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shardings = {
+        "params": {"w": NamedSharding(mesh, P("data", "model")),
+                   "e": NamedSharding(mesh, P(None))},
+        "step": NamedSharding(mesh, P()),
+    }
+    restored, step, _ = ckpt.restore(str(tmp_path), tree,
+                                     shardings=shardings)
+    assert step == 3
+    assert restored["params"]["w"].sharding == shardings["params"]["w"]
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))

@@ -1,0 +1,51 @@
+"""Dry-run path test: one real cell through repro.launch.dryrun in a
+subprocess (the 512-forced-device flag must not leak into this process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
+def test_dryrun_cell_compiles(tmp_path, mesh_flag):
+    """xlstm decode_32k is the fastest-compiling cell (~5 s)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-1.3b",
+         "--shape", "decode_32k", "--out", str(tmp_path)] + mesh_flag,
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO)
+    assert res.returncode == 0, res.stderr[-2000:]
+    mesh = "2x16x16" if mesh_flag else "16x16"
+    out = json.load(open(tmp_path / f"xlstm-1.3b__decode_32k__{mesh}.json"))
+    assert out["status"] == "ok"
+    assert out["chips"] == (512 if mesh_flag else 256)
+    assert out["flops_per_device"] > 0
+    assert out["memory_s"] > 0
+    assert out["dominant"] in ("compute", "memory", "collective")
+
+
+def test_skipped_cell_records_reason(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "long_500k", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=240, env=env, cwd=REPO)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.load(open(tmp_path / "olmo-1b__long_500k__16x16.json"))
+    assert out["status"] == "skipped"
+    assert "full-attention" in out["reason"]
+
+
+def test_local_process_sees_one_device():
+    """The XLA_FLAGS device-count override must NOT be global."""
+    import jax
+
+    assert len(jax.devices()) == 1

@@ -1,0 +1,162 @@
+"""System-invariant property tests: MoE routing, ring-buffer cache
+equivalence, chunked-CE correctness, accumulator algebra."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke
+from repro.core.kahan import KahanAccumulator
+from repro.models import layers as L
+from repro.models.common import chunked_ce_loss
+from repro.models.moe import moe_apply, moe_init
+
+
+# --- MoE routing invariants --------------------------------------------------
+
+def _moe_cfg(capacity_factor=8.0):
+    cfg = get_smoke("deepseek-v2-lite-16b")
+    return cfg.replace(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=capacity_factor))
+
+
+def test_moe_identity_experts_preserve_scale():
+    """With all expert FFNs zeroed, the MoE output must be exactly the
+    shared-expert output (routed contribution zero)."""
+    cfg = _moe_cfg()
+    p, _ = moe_init(jax.random.key(0), cfg)
+    p = dict(p)
+    p["gate"] = jnp.zeros_like(p["gate"])
+    p["up"] = jnp.zeros_like(p["up"])
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, metrics = moe_apply(p, cfg, x)
+    from repro.models.layers import mlp_apply
+    want = mlp_apply(p["shared"], cfg, x.reshape(-1, cfg.d_model)).reshape(
+        x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+
+
+def test_moe_dropless_at_high_capacity():
+    cfg = _moe_cfg(capacity_factor=16.0)
+    p, _ = moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    _, metrics = moe_apply(p, cfg, x)
+    assert float(metrics["dropped_frac"]) == 0.0
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens within a routing group permutes outputs (dropless
+    regime) — routing is position-independent."""
+    cfg = _moe_cfg(capacity_factor=16.0)
+    p, _ = moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(2), (1, 16, cfg.d_model),
+                          jnp.float32)
+    y, _ = moe_apply(p, cfg, x)
+    perm = np.random.default_rng(0).permutation(16)
+    y2, _ = moe_apply(p, cfg, x[:, perm])
+    np.testing.assert_allclose(np.asarray(y[:, perm]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --- ring-buffer sliding-window cache ---------------------------------------
+
+def test_ring_cache_decode_matches_full_cache():
+    """Decode with a ring buffer of length `window` must produce the same
+    outputs as decode with a full-length cache (window masking equal)."""
+    cfg = get_smoke("hymba-1.5b")
+    st_ = L.AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.rope_theta, cfg.qkv_bias, jnp.float32)
+    p, _ = L.attn_init(jax.random.key(3), cfg)
+    rng = np.random.default_rng(0)
+    w = cfg.sliding_window  # 16 in smoke
+    s0 = 24
+    x_hist = jnp.asarray(rng.standard_normal((1, s0, cfg.d_model)),
+                         jnp.float32)
+
+    # full cache: prefill s0 then decode 4 steps
+    full_kv = (jnp.zeros((1, s0 + 8, cfg.n_kv_heads, cfg.head_dim)),) * 2
+    _, full_kv = L.attention(p, st_, x_hist, q_pos=jnp.arange(s0),
+                             window=w, cache=full_kv)
+    # ring cache: same prefill
+    ring_kv = (jnp.zeros((1, w, cfg.n_kv_heads, cfg.head_dim)),) * 2
+    _, ring_kv = L.attention(p, st_, x_hist, q_pos=jnp.arange(s0),
+                             window=w, cache=ring_kv)
+
+    for step in range(4):
+        xt = jnp.asarray(rng.standard_normal((1, 1, cfg.d_model)),
+                         jnp.float32)
+        pos = jnp.asarray(s0 + step)
+        out_f, full_kv = L.attention(p, st_, xt, q_pos=pos[None], window=w,
+                                     cache=full_kv, cache_index=pos)
+        out_r, ring_kv = L.attention(p, st_, xt, q_pos=pos[None], window=w,
+                                     cache=ring_kv, cache_index=pos)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_r),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --- chunked CE --------------------------------------------------------------
+
+def test_chunked_ce_matches_direct():
+    cfg = get_smoke("olmo-1b").replace(loss_chunk=8)
+    rng = np.random.default_rng(1)
+    b, s, d, v = 2, 24, cfg.d_model, cfg.padded_vocab
+    x = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, v)) * 0.02, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    mask = jnp.asarray(rng.random((b, s)) > 0.3, jnp.float32)
+
+    sum_loss, cnt = chunked_ce_loss(x, w, labels, mask, cfg)
+
+    logits = (x @ w).astype(jnp.float32)
+    logits = logits + jnp.where(jnp.arange(v) < cfg.vocab_size, 0.0, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.sum((lse - gold) * mask)
+    assert abs(float(sum_loss) - float(want)) / abs(float(want)) < 1e-6
+    assert float(cnt) == float(jnp.sum(mask))
+
+
+def test_chunked_ce_padded_vocab_never_predicted():
+    """The padded vocab region must be masked out of the softmax."""
+    cfg = get_smoke("olmo-1b")
+    assert cfg.padded_vocab > cfg.vocab_size
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, 4, cfg.d_model)), jnp.float32)
+    # head weight that strongly favors a padded token
+    w = jnp.zeros((cfg.d_model, cfg.padded_vocab))
+    w = w.at[:, cfg.vocab_size + 3].set(100.0)
+    labels = jnp.zeros((1, 4), jnp.int32)
+    mask = jnp.ones((1, 4), jnp.float32)
+    sum_loss, _ = chunked_ce_loss(x, w, labels, mask, cfg)
+    # if the padded logit leaked, lse would be ~100*|x| and loss enormous
+    assert float(sum_loss) / 4 < 50.0
+
+
+# --- accumulator algebra ------------------------------------------------------
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                          allow_subnormal=False, width=32),
+                min_size=2, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_accumulator_split_merge_consistency(xs):
+    """add-all == merge(add-half, add-half) up to fp32 noise of the total."""
+    half = len(xs) // 2
+    a = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs:
+        a = a.add(jnp.float32(x))
+    b1 = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs[:half]:
+        b1 = b1.add(jnp.float32(x))
+    b2 = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs[half:]:
+        b2 = b2.add(jnp.float32(x))
+    merged = b1.merge(b2)
+    scale = max(sum(abs(float(np.float32(x))) for x in xs), 1.0)
+    assert abs(float(a.total()) - float(merged.total())) <= 1e-5 * scale

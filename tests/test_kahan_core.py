@@ -1,0 +1,151 @@
+"""Core Kahan primitive tests: EFT invariants (hypothesis property tests),
+accumulator semantics, jit-survival of the compensation sequence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import kahan as K
+from repro.core import numerics
+
+f32 = st.floats(min_value=-float(2 ** 40), max_value=float(2 ** 40),
+                allow_nan=False, allow_infinity=False, allow_subnormal=False,
+                width=32)
+
+
+@given(f32, f32)
+@settings(max_examples=200, deadline=None)
+def test_two_sum_exact(a, b):
+    """two_sum is an error-free transformation: a + b == s + e EXACTLY
+    (verified in exact rational arithmetic via Fraction). fp32 here — JAX
+    x64 is off and the property is precision-independent."""
+    from fractions import Fraction
+
+    a = float(np.float32(a))
+    b = float(np.float32(b))
+    s, e = K.two_sum(jnp.float32(a), jnp.float32(b))
+    s, e = float(s), float(e)
+    assert Fraction(a) + Fraction(b) == Fraction(s) + Fraction(e)
+
+
+@given(f32, f32)
+@settings(max_examples=100, deadline=None)
+def test_two_sum_matches_fast_two_sum_when_ordered(a, b):
+    hi, lo = (a, b) if abs(a) >= abs(b) else (b, a)
+    s1, e1 = K.two_sum(jnp.float32(hi), jnp.float32(lo))
+    s2, e2 = K.fast_two_sum(jnp.float32(hi), jnp.float32(lo))
+    assert float(s1) == float(s2)
+    assert float(e1) == float(e2)
+
+
+@given(st.floats(min_value=-float(2 ** 30), max_value=float(2 ** 30),
+                 allow_nan=False, allow_subnormal=False, width=32),
+       st.floats(min_value=-float(2 ** 30), max_value=float(2 ** 30),
+                 allow_nan=False, allow_subnormal=False, width=32))
+@settings(max_examples=200, deadline=None)
+def test_two_prod_exact_fp32(a, b):
+    """two_prod: a*b == p + e exactly (fp32 products are exact in fp64).
+
+    Veltkamp splitting requires the error term not to underflow — products
+    near the subnormal boundary are excluded (|a*b| > 2^-70 keeps the
+    e ~ eps*|ab| term in normal range with margin)."""
+    from hypothesis import assume
+
+    assume(a == 0.0 or b == 0.0 or abs(float(a) * float(b)) > 2.0 ** -70)
+    p, e = K.two_prod(jnp.float32(a), jnp.float32(b))
+    assert float(np.float64(a) * np.float64(b)) == float(p) + float(e) or \
+        abs((np.float64(a) * np.float64(b) - (float(p) + float(e)))
+            / max(1e-30, abs(np.float64(a) * np.float64(b)))) < 1e-14
+
+
+def test_kahan_step_recovers_lost_bits():
+    """1e8 + 1 (fp32) loses the 1 without compensation; Kahan keeps it."""
+    s = jnp.float32(1e8)
+    c = jnp.float32(0.0)
+    for _ in range(64):
+        s, c = K.kahan_step(s, c, jnp.float32(1.0))
+    naive = jnp.float32(1e8)
+    for _ in range(64):
+        naive = naive + jnp.float32(1.0)
+    exact = 1e8 + 64.0
+    assert abs(float(s + c) - exact) < abs(float(naive) - exact)
+    assert abs(float(s + c) - exact) <= 8.0  # recovered nearly everything
+
+
+def test_kahan_combine_convention():
+    """Merging accumulators preserves total = s + c across tree levels."""
+    rng = np.random.default_rng(1)
+    xs = rng.standard_normal(1024).astype(np.float32) * 1e4
+    # two halves accumulated separately then merged
+    s1 = c1 = jnp.float32(0.0)
+    s2 = c2 = jnp.float32(0.0)
+    for x in xs[:512]:
+        s1, c1 = K.kahan_step(s1, c1, jnp.float32(x))
+    for x in xs[512:]:
+        s2, c2 = K.kahan_step(s2, c2, jnp.float32(x))
+    sm, cm = K.kahan_combine(s1, c1, s2, c2)
+    exact = numerics.exact_sum(xs)
+    assert abs(float(sm + cm) - exact) <= abs(np.float32(xs.sum()) - exact) + 1e-3
+
+
+@pytest.mark.parametrize("n,cond", [(4096, 1e4), (16384, 1e6)])
+def test_kahan_sum_beats_naive(n, cond):
+    x, exact, achieved = numerics.gen_sum(n, cond, seed=3)
+    naive = float(K.naive_sum(jnp.asarray(x)))
+    kah = float(K.kahan_sum(jnp.asarray(x)))
+    err_n = numerics.relative_error(naive, exact)
+    err_k = numerics.relative_error(kah, exact)
+    assert err_k <= err_n * 1.01 + 1e-12
+    assert err_k < 1e-2 * max(achieved / 1e6, 1.0)
+
+
+def test_kahan_dot_accuracy_ordering():
+    a, b, exact, cond = numerics.gen_dot(8192, 1e6, seed=7)
+    naive = float(K.naive_dot(jnp.asarray(a), jnp.asarray(b)))
+    kah = float(K.kahan_dot(jnp.asarray(a), jnp.asarray(b), lanes=8))
+    dot2 = float(K.kahan_dot2(jnp.asarray(a), jnp.asarray(b), lanes=8))
+    e_n = numerics.relative_error(naive, exact)
+    e_k = numerics.relative_error(kah, exact)
+    e_2 = numerics.relative_error(dot2, exact)
+    assert e_2 <= e_k * 1.01 + 1e-12
+    assert e_2 < 1e-4
+
+
+def test_two_sum_not_optimized_away_under_jit():
+    """XLA must not reassociate/fuse the compensation sequence away. The
+    canary: (1e8 + 1) - 1e8 == 0 in fp32, so the compensation term must be
+    nonzero after jit if the sequence survived."""
+    @jax.jit
+    def f():
+        s, c = K.kahan_step(jnp.float32(1e8), jnp.float32(0.0),
+                            jnp.float32(1.0))
+        return c
+
+    assert float(f()) != 0.0
+
+
+def test_accumulator_pytree():
+    tree = {"a": jnp.zeros((4,), jnp.bfloat16),
+            "b": {"c": jnp.zeros((2, 2), jnp.float32)}}
+    acc = K.KahanAccumulator.zeros_like(tree)
+    delta = {"a": jnp.full((4,), 0.001, jnp.bfloat16),
+             "b": {"c": jnp.ones((2, 2), jnp.float32)}}
+    for _ in range(100):
+        acc = acc.add(delta)
+    total = acc.total()
+    # bf16 naive accumulation of 0.001 x100 drifts badly; kahan keeps ~0.1
+    assert np.allclose(np.asarray(total["a"], np.float32), 0.1, rtol=0.02)
+    assert np.allclose(total["b"]["c"], 100.0)
+
+
+def test_tree_kahan_sq_norm_matches_fp64():
+    rng = np.random.default_rng(2)
+    tree = {"w": rng.standard_normal((128, 64)).astype(np.float32),
+            "b": rng.standard_normal(64).astype(np.float32)}
+    got = float(K.tree_kahan_sq_norm(jax.tree.map(jnp.asarray, tree)))
+    want = float(sum((np.asarray(v, np.float64) ** 2).sum()
+                     for v in tree.values()))
+    assert abs(got - want) / want < 1e-6

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: reduced config, one loss + prefill + decode
+step on CPU; output shapes + finiteness; prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke, list_archs
+from repro.models import build_model
+
+
+def make_batch(cfg, b=2, s=32, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                              jnp.int32),
+        "loss_mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.vision is not None:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.vision.n_patches, cfg.d_model)),
+            jnp.float32)
+        batch["loss_mask"] = batch["loss_mask"].at[:, :cfg.vision.n_patches].set(0)
+    if cfg.encoder is not None:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder.n_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params, specs = model.init(jax.random.key(0))
+    # spec tree mirrors the param tree
+    assert (jax.tree_util.tree_structure(jax.tree.map(lambda _: 0, params))
+            == jax.tree_util.tree_structure(
+                jax.tree.map(lambda _: 0, specs,
+                             is_leaf=lambda s: not isinstance(s, dict))))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    # gradients flow and are finite
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_serve_roundtrip(arch):
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    b, s = 2, 32
+    batch = make_batch(cfg, b, s)
+    cache, _ = model.init_cache(b, s + 8)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape[0] == b
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill logits"
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = jax.jit(model.decode_step)(params, cache, tok,
+                                                jnp.asarray(s))
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: decode logits"
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2.5-3b", "hymba-1.5b",
+                                  "xlstm-1.3b", "deepseek-v2-lite-16b"])
+def test_decode_matches_prefill(arch):
+    """prefill(s) + decode(token) must equal prefill(s+1) at the new
+    position — the KV-cache / recurrent-state correctness invariant."""
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:
+        # dropping at different batch shapes legitimately changes outputs;
+        # test the cache path with capacity high enough that nothing drops
+        import dataclasses as _dc
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, capacity_factor=16.0))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(1))
+    b, s = 2, 24
+    batch = make_batch(cfg, b, s, key=5)
+    cache, _ = model.init_cache(b, s + 4)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    step_logits, _ = jax.jit(model.decode_step)(params, cache, tok,
+                                                jnp.asarray(s))
+
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], tok[:, None]], 1)
+    batch2["labels"] = jnp.concatenate(
+        [batch["labels"], jnp.zeros((b, 1), jnp.int32)], 1)
+    batch2["loss_mask"] = jnp.ones((b, s + 1), jnp.float32)
+    cache2, _ = model.init_cache(b, s + 4)
+    full_logits, _ = jax.jit(model.prefill)(params, batch2, cache2)
+    # xlstm's chunkwise path runs its einsums in bf16 (TPU MXU layout);
+    # chunked-vs-stepwise bf16 rounding orders differ slightly
+    tol = 5e-3 if arch == "xlstm-1.3b" else 2e-3
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits),
+                               rtol=tol, atol=tol)
+
+
+def test_vlm_splices_vision_tokens():
+    cfg = get_smoke("internvl2-2b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    # changing a MASKED (vision) position's token must not change the loss
+    loss1, _ = jax.jit(model.loss)(params, batch)
+    batch2 = dict(batch)
+    batch2["tokens"] = batch["tokens"].at[:, 0].set(7)
+    loss2, _ = jax.jit(model.loss)(params, batch2)
+    assert float(loss1) == float(loss2)
+
+
+def test_moe_load_balance_metrics():
+    cfg = get_smoke("deepseek-v2-lite-16b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert float(metrics["aux_loss"]) > 0.0
+    assert 0.0 <= float(metrics["dropped_frac"]) <= 1.0
+
+
+def test_sliding_window_masks_distant_context():
+    """hymba SWA: with window w, logits at position p must be independent of
+    tokens at positions < p - w (modulo the SSM path, which is why we test
+    attention in isolation via the layers API)."""
+    from repro.models import layers as L
+
+    cfg = get_smoke("hymba-1.5b")
+    st = L.AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                      cfg.rope_theta, cfg.qkv_bias, jnp.float32)
+    p, _ = L.attn_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 32, cfg.d_model)), jnp.float32)
+    w = 4
+    out1, _ = L.attention(p, st, x, q_pos=jnp.arange(32), window=w)
+    x2 = x.at[0, 0].set(123.0)  # beyond the window of the last position
+    out2, _ = L.attention(p, st, x2, q_pos=jnp.arange(32), window=w)
+    np.testing.assert_allclose(out1[0, -1], out2[0, -1], rtol=1e-5)
+    assert not np.allclose(out1[0, 1], out2[0, 1], rtol=1e-5)

@@ -1,0 +1,100 @@
+"""Trainer integration: loss decreases on structured synthetic data,
+microbatch-accumulation equivalence, data-pipeline determinism/resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer, make_train_step
+from repro.models import build_model
+
+
+def _tc(steps=30, **kw):
+    return TrainConfig(steps=steps, log_every=5, ckpt_every=10 ** 9,
+                       warmup=5,
+                       opt=AdamWConfig(lr=3e-3, weight_decay=0.0),
+                       **kw)
+
+
+def test_loss_decreases_on_markov_data():
+    cfg = get_smoke("olmo-1b").replace(loss_chunk=32)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    tr = Trainer(cfg, _tc(steps=30), data)
+    tr.run()
+    losses = [m["loss"] for m in tr.metrics_history]
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """4 microbatches with compensated accumulation == single batch step
+    (up to fp32 noise): grads are identical in expectation; with kahan
+    accumulation in fp32 the trajectories must match tightly."""
+    cfg = get_smoke("olmo-1b").replace(loss_chunk=32,
+                                       param_dtype="float32",
+                                       compute_dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    from repro.optim import init as opt_init
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8))
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+
+    tc1 = _tc(steps=1, microbatches=1)
+    tc4 = _tc(steps=1, microbatches=4)
+    step1 = jax.jit(make_train_step(model, cfg, tc1))
+    step4 = jax.jit(make_train_step(model, cfg, tc4))
+    o1 = opt_init(tc1.opt, params)
+    o4 = opt_init(tc4.opt, params)
+    p1, _, m1 = step1(params, o1, batch)
+    p4, _, m4 = step4(params, o4, batch)
+
+    flat1 = jax.tree.leaves(p1)
+    flat4 = jax.tree.leaves(p4)
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-3
+
+
+def test_data_determinism_and_resume():
+    dc = DataConfig(vocab_size=101, seq_len=16, global_batch=4)
+    d1 = SyntheticLM(dc)
+    d2 = SyntheticLM(dc)
+    b17a = d1.batch_at(17)
+    b17b = d2.batch_at(17)
+    np.testing.assert_array_equal(b17a["tokens"], b17b["tokens"])
+    # iterator resume
+    it = SyntheticLM(dc)
+    for _ in range(3):
+        next(it)
+    state = it.state_dict()
+    b3 = next(it)
+    it2 = SyntheticLM(dc)
+    it2.load_state_dict(state)
+    b3r = next(it2)
+    np.testing.assert_array_equal(b3["tokens"], b3r["tokens"])
+
+
+def test_data_host_sharding_partitions_batch():
+    dc = DataConfig(vocab_size=101, seq_len=16, global_batch=8)
+    d = SyntheticLM(dc)
+    full_shapes = d.batch_at(0)["tokens"].shape
+    half = d.batch_at(0, host_index=0, host_count=2)["tokens"].shape
+    assert full_shapes == (8, 16) and half == (4, 16)
+    # different hosts get different data
+    a = d.batch_at(0, host_index=0, host_count=2)["tokens"]
+    b = d.batch_at(0, host_index=1, host_count=2)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+def test_labels_are_shifted_tokens():
+    dc = DataConfig(vocab_size=101, seq_len=16, global_batch=2)
+    b = SyntheticLM(dc).batch_at(0)
+    # labels[t] should continue the token stream (next-token prediction)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
