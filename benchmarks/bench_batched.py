@@ -1,0 +1,59 @@
+"""Batched engine throughput: one (batch, steps) Pallas grid vs a Python
+loop of single kernel calls.
+
+The follow-up paper (Hofmann et al. 2016) extends the "compensation is
+free once vectorized" claim to thread-parallel saturation; the JAX analog
+is batched execution — one grid launch amortizes dispatch and keeps the
+pipeline full across requests. Rows land in BENCH_*.json as
+``batched_*`` so batched throughput is tracked release over release.
+
+Output derived column: Melem/s over the whole batch (same unit for the
+loop and grid variants, so the ratio is the dispatch-amortization win).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops
+
+
+def main(batch: int = 8, n: int = 1 << 16) -> None:
+    print(f"# batched engine: batch={batch} n={n} "
+          "(one (batch, steps) grid vs per-call loop; interpret mode "
+          "validates the ordering, not TPU wall time)")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    total = batch * n
+
+    def loop_dot(x, y):
+        return jnp.stack([ops.dot(x[i], y[i], mode="kahan")
+                          for i in range(batch)])
+
+    def loop_asum(x):
+        return jnp.stack([ops.asum(x[i], mode="kahan")
+                          for i in range(batch)])
+
+    for mode in ("naive", "kahan", "dot2"):
+        us = time_fn(lambda x, y, m=mode: ops.batched_dot(x, y, mode=m),
+                     a, b)
+        emit(f"batched_dot_{mode}", us, f"{total / us:.1f}Melem/s")
+    us_loop = time_fn(loop_dot, a, b)
+    emit("batched_dot_kahan_loop", us_loop, f"{total / us_loop:.1f}Melem/s")
+
+    for mode in ("naive", "kahan"):
+        us = time_fn(lambda x, m=mode: ops.batched_asum(x, mode=m), a)
+        emit(f"batched_asum_{mode}", us, f"{total / us:.1f}Melem/s")
+    us_loop = time_fn(loop_asum, a)
+    emit("batched_asum_kahan_loop", us_loop, f"{total / us_loop:.1f}Melem/s")
+
+    # vmap dispatch sanity: custom_vmap must land on the batched grid
+    vm = jax.jit(jax.vmap(lambda x, y: ops.dot(x, y, mode="kahan")))
+    us = time_fn(vm, a, b)
+    emit("batched_dot_kahan_vmap", us, f"{total / us:.1f}Melem/s")
+
+
+if __name__ == "__main__":
+    main()

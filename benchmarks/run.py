@@ -5,12 +5,20 @@ blocks). Mapping to the paper:
 
   bench_accuracy        motivation (why compensate): error vs condition
   bench_dot_variants    Fig. 2 — per-variant cycles across the hierarchy
+  bench_batched         batched engine: one (batch, steps) grid vs a
+                        per-call loop (the 2016 follow-up's saturation
+                        claim, in batched-serving form)
   bench_scaling         Fig. 3 — multicore/multichip scaling + saturation
   bench_architectures   Table 2 / Fig. 4 — cross-generation comparison
   bench_flash_attention the §Perf-identified fix: fused attention with
                         compensated online softmax
   bench_e2e             system-level step cost, Kahan on/off
   bench_roofline        §Roofline table from the dry-run artifacts
+
+Accumulator contract (every compensated row above): reductions carry an
+``(s, c)`` pair with ``total = s + c``; partial grids merge through the
+deterministic two-sum tree in ``repro.kernels.engine.merge_accumulators``
+— cross-lane, cross-batch (vmap), and cross-device (collectives) alike.
 """
 
 
@@ -18,6 +26,7 @@ def main() -> None:
     from benchmarks import (
         bench_accuracy,
         bench_architectures,
+        bench_batched,
         bench_dot_variants,
         bench_e2e,
         bench_flash_attention,
@@ -26,9 +35,9 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_accuracy, bench_dot_variants, bench_scaling,
-                bench_architectures, bench_flash_attention, bench_e2e,
-                bench_roofline):
+    for mod in (bench_accuracy, bench_dot_variants, bench_batched,
+                bench_scaling, bench_architectures, bench_flash_attention,
+                bench_e2e, bench_roofline):
         print(f"# ===== {mod.__name__} =====")
         mod.main()
 

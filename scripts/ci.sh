@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Two-stage CI: tier-1 (fast, must stay < 120 s) then the slow tier.
+#
+#   scripts/ci.sh            # both stages
+#   scripts/ci.sh fast       # tier-1 only (what the driver runs)
+#   scripts/ci.sh slow       # slow tier only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+stage="${1:-all}"
+
+if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
+    echo "=== stage 1: tier-1 (fast) ==="
+    python -m pytest -x -q
+fi
+
+if [[ "$stage" == "slow" || "$stage" == "all" ]]; then
+    echo "=== stage 2: slow tier ==="
+    python -m pytest -q -m slow
+fi

@@ -1,0 +1,57 @@
+"""JAX version-compat shims.
+
+The repo targets the jax that ships in the container (0.4.x) but is written
+against APIs that moved between 0.4 and 0.6: ``shard_map`` graduated from
+``jax.experimental`` to ``jax.shard_map`` (and renamed ``check_rep`` to
+``check_vma``), ``jax.lax.pcast`` appeared with the varying-axes type
+system, and ``jax.set_mesh`` replaced entering the ``Mesh`` context
+manager. Every call site goes through this module so the drift lives in
+exactly one place.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def shard_map(f=None, /, *, mesh, in_specs, out_specs,
+              check_vma: bool = True):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    Accepts the modern ``check_vma`` keyword and translates it to the old
+    ``check_rep`` name when falling back. Usable directly or as a
+    decorator factory (matching both APIs' calling conventions).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        wrapper = lambda g: jax.shard_map(g, **kw)  # noqa: E731
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)
+        wrapper = lambda g: _sm(g, **kw)  # noqa: E731
+    return wrapper if f is None else wrapper(f)
+
+
+def pcast_varying(tree: Any, axis_name: str) -> Any:
+    """Mark ``tree`` as varying over ``axis_name`` (no-op pre-pcast).
+
+    On jax versions with the varying-manual-axes type system, a scan carry
+    that mixes gathered (varying) values with fresh zeros needs an explicit
+    ``pcast``; older versions have no such typing and the cast is identity.
+    """
+    if hasattr(jax.lax, "pcast"):
+        return jax.tree.map(
+            lambda t: jax.lax.pcast(t, (axis_name,), to="varying"), tree)
+    return tree
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context when available, else the Mesh's own
+    context manager (the 0.4.x spelling of an ambient mesh)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

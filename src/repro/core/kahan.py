@@ -47,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax import tree_util
 
+from repro.core import compat
+
 
 Array = jax.Array
 
@@ -430,7 +432,6 @@ def compensated_psum_scalar(s: Array, c: Array, axis_name: str) -> Tuple[Array, 
     init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
     # under shard_map the gathered xs are "varying" over axis_name; the
     # carry must match that manual-axes type
-    init = jax.tree.map(
-        lambda t: jax.lax.pcast(t, (axis_name,), to="varying"), init)
+    init = compat.pcast_varying(init, axis_name)
     (rs, rc), _ = jax.lax.scan(body, init, (ss, cs))
     return rs, rc

@@ -92,9 +92,9 @@ def gen_dot(n: int, cond: float, seed: int = 0,
     u1 = 2.0 * rng.uniform(size=n - n2) - 1.0
     u2 = 2.0 * rng.uniform(size=n - n2) - 1.0
     for j in range(n - n2):
-        a2[j] = float(dtype(u1[j] * math.exp2(e2[j])))
+        a2[j] = float(dtype(u1[j] * 2.0 ** e2[j]))
         b2[j] = float(dtype(
-            (u2[j] * math.exp2(e2[j]) - (s_run + c_run)) / a2[j]))
+            (u2[j] * 2.0 ** e2[j] - (s_run + c_run)) / a2[j]))
         s_run, c_run = dd_add(s_run, c_run, a2[j] * b2[j])
     a = np.concatenate([a1, a2])
     b = np.concatenate([b1, b2])

@@ -5,6 +5,15 @@ all-gather/reduce-scatter/all-to-all from the sharding specs, and the XLA
 latency-hiding scheduler overlaps them with compute (enabled via the flags
 in launch/train.py). What lives here is the *explicitly managed* layer:
 
+* ``sharded_asum`` / ``sharded_dot`` — the engine's sharded path: each
+  device runs the compensated Pallas kernel over its local shard, the
+  per-device ``(s, c)`` accumulator grids are all-gathered, and ONE
+  deterministic two-sum tree (``engine.merge_accumulators``, device-major
+  order) collapses them — never a plain ``psum``, whose reduction order
+  the backend may re-associate run to run.
+* ``merge_sharded_accumulators`` — that gather-side fold, exposed
+  separately so tests can check it against the single-device merge on
+  identical data.
 * ``deterministic_mean`` — shard_map wrapper around the core compensated
   scalar reduction (bitwise run-to-run reproducible metrics regardless of
   reduction order; DESIGN.md §3 item 4).
@@ -16,16 +25,82 @@ in launch/train.py). What lives here is the *explicitly managed* layer:
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.kahan import compensated_psum_scalar, kahan_step
+from repro.kernels.engine import (
+    Accumulator,
+    CompensatedReduction,
+    merge_accumulators,
+)
 
+
+# ---------------------------------------------------------------------------
+# Sharded compensated reductions (the engine's cross-device path)
+# ---------------------------------------------------------------------------
+
+def merge_sharded_accumulators(s_gathered: jax.Array, c_gathered: jax.Array,
+                               ) -> jax.Array:
+    """Collapse all-gathered per-device accumulator grids to one scalar.
+
+    ``s_gathered``/``c_gathered``: [n_dev, rows, lanes] in device-major
+    order (the order ``all_gather`` fixes). The fold IS the single-device
+    two-sum tree on the stacked grids — so the sharded result equals
+    ``merge_accumulators`` run on the same data on one device, and is
+    independent of any backend reduction-order choice.
+    """
+    return merge_accumulators(s_gathered, c_gathered)
+
+
+def _sharded_reduce(axis: str, local_accumulate):
+    """shard_map body shared by sharded_asum / sharded_dot: run the
+    local kernel, all-gather the (s, c) grids, tree-fold in device order."""
+
+    def reduce(*shards):
+        acc: Accumulator = local_accumulate(*shards)
+        ss = jax.lax.all_gather(acc.s, axis)   # [n_dev, rows, lanes]
+        cs = jax.lax.all_gather(acc.c, axis)
+        return merge_sharded_accumulators(ss, cs)
+
+    return reduce
+
+
+def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
+                 mode: str = "kahan", unroll: int = 8,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Compensated sum of an array sharded over one mesh axis.
+
+    Per-device: the engine's Pallas sum kernel over the local shard.
+    Cross-device: all-gather of the (s, c) grids + the deterministic
+    two-sum tree — NOT a psum. Returns a replicated fp32 scalar that is
+    bitwise reproducible for a fixed mesh size.
+    """
+    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+    reduce = _sharded_reduce(axis, eng.sum_accumulators)
+    return compat.shard_map(reduce, mesh=mesh, in_specs=P(axis),
+                            out_specs=P(), check_vma=False)(x)
+
+
+def sharded_dot(mesh: Mesh, a: jax.Array, b: jax.Array, *,
+                axis: str = "data", mode: str = "kahan", unroll: int = 8,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """Compensated dot of two identically-sharded 1-D arrays (see
+    ``sharded_asum`` for the merge semantics)."""
+    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+    reduce = _sharded_reduce(axis, eng.dot_accumulators)
+    return compat.shard_map(reduce, mesh=mesh, in_specs=(P(axis), P(axis)),
+                            out_specs=P(), check_vma=False)(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Scalar metric reductions
+# ---------------------------------------------------------------------------
 
 def deterministic_mean(mesh: Mesh, values: jax.Array, axis: str = "data",
                        ) -> jax.Array:
@@ -34,8 +109,8 @@ def deterministic_mean(mesh: Mesh, values: jax.Array, axis: str = "data",
     Gathers the (value, comp) pairs and folds them in device order with
     two-sum — the distributed form of the paper's compensated reduction.
     """
-    @partial(jax.shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(),
-             check_vma=False)  # fold result replicated by construction
+    @compat.shard_map(mesh=mesh, in_specs=P(axis), out_specs=P(),
+                      check_vma=False)  # fold result replicated by construction
     def reduce(v):
         s, c = kahan_step(jnp.zeros(()), jnp.zeros(()), v[0])
         rs, rc = compensated_psum_scalar(s, c, axis)

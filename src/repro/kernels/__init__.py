@@ -14,8 +14,13 @@ package carries the core artifacts:
                     online-softmax accumulators (the fix for the dominant
                     roofline term found in EXPERIMENTS.md §Perf, with the
                     paper's technique applied to the l/acc running sums).
+  engine.py       — the unified CompensatedReduction engine: one (s, c)
+                    accumulator contract (total = s + c, merge = two-sum
+                    tree), one padding/promotion/blocking policy, batched
+                    (batch, steps) grids with a custom_vmap rule.
   ops.py          — jit'd public wrappers (interpret on CPU, Mosaic on TPU).
   ref.py          — pure-jnp oracles with identical rounding sequences.
 """
 
+from repro.kernels import engine  # noqa: F401
 from repro.kernels import ops  # noqa: F401

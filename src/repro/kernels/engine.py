@@ -1,0 +1,315 @@
+"""Unified compensated-reduction engine.
+
+One accumulator contract for every compensated reduction in the repo
+(dot / asum / matmul, single, batched, and sharded):
+
+    total = s + c            (the ``kahan_step`` sign convention)
+    merge = two-sum tree     (``merge_accumulators``: pairwise fold in a
+                              fixed order — deterministic, associativity-
+                              free, robust to magnitude inversion)
+
+``CompensatedReduction`` owns the three policies the kernel wrappers used
+to re-implement independently:
+
+* **promotion** — inputs are promoted to ``COMPUTE_DTYPE`` (fp32) exactly
+  once, *before* padding, so fp16/bf16 inputs don't allocate an extra
+  low-precision padded copy and the compute dtype is stated in one place.
+  Results are always fp32; the kernels' per-block ``astype`` is a no-op.
+* **padding / blocking** — 1-D streams are zero-padded (exact: adding
+  0.0 is error-free for finite accumulators) to the kernel block
+  ``SUBLANES * unroll * LANES``; matmul pads M/N/K to block multiples.
+* **merge** — accumulator grids collapse through the same two-sum tree
+  everywhere: cross-lane (here), cross-batch-element (``vmap`` of the
+  same tree), cross-device (``repro.distributed.collectives`` gathers
+  per-device ``(s, c)`` grids and folds them through this very function).
+
+``interpret=None`` resolution (interpret mode off only on a real TPU
+backend) is hoisted here too — ``resolve_interpret`` is the single
+authority for dot, asum, and matmul.
+
+Batched variants (``batched_dot`` / ``batched_asum``) lay a ``[batch, n]``
+problem out as ONE Pallas grid ``(batch, steps)`` instead of a Python loop
+of kernel calls; per batch row the kernel executes the identical rounding
+sequence, so results are bitwise-equal to the per-call loop. ``jax.vmap``
+of the scalar entry points dispatches to the batched grid through a
+``jax.custom_batching.custom_vmap`` rule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util
+
+from repro.core import kahan as K
+from repro.kernels import kahan_dot as _kd
+from repro.kernels import kahan_matmul as _km
+from repro.kernels import kahan_sum as _ks
+
+COMPUTE_DTYPE = jnp.float32
+
+LANES = _kd.LANES
+SUBLANES = _kd.SUBLANES
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Single authority for ``interpret=None``: Mosaic only on a real TPU
+    backend, interpret mode everywhere else. Shared by dot/asum/matmul."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# Accumulator pytree
+# ---------------------------------------------------------------------------
+
+@tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Accumulator:
+    """A compensated accumulator grid: ``total = s + c`` elementwise.
+
+    Shapes: ``[rows, lanes]`` for single reductions, ``[batch, rows,
+    lanes]`` for batched ones. First-class pytree so it can cross jit /
+    scan / shard_map boundaries and be all-gathered per device. NOTE:
+    ``total()`` treats a 3-D grid as *batched* (one total per leading
+    index); for device-gathered ``[n_dev, rows, lanes]`` grids that must
+    collapse to ONE scalar, use ``merge_accumulators`` directly (or
+    ``distributed.collectives.merge_sharded_accumulators``).
+    """
+
+    s: jax.Array
+    c: jax.Array
+
+    def tree_flatten(self):
+        return (self.s, self.c), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def combine(self, other: "Accumulator") -> "Accumulator":
+        """Elementwise two-sum merge of two grids (same shape)."""
+        s, c = K.kahan_combine(self.s, self.c, other.s, other.c)
+        return Accumulator(s, c)
+
+    def total(self) -> jax.Array:
+        """Collapse through the two-sum tree: scalar for ``[rows, lanes]``
+        grids, ``[batch]`` for batched grids (vmap of the same tree —
+        identical rounding sequence per row)."""
+        if self.s.ndim == 3:
+            return jax.vmap(merge_accumulators)(self.s, self.c)
+        return merge_accumulators(self.s, self.c)
+
+
+def merge_accumulators(s: jax.Array, c: jax.Array) -> jax.Array:
+    """Deterministic compensated merge of an accumulator grid -> scalar.
+
+    THE merge policy: flatten, pad to a power of two with exact zeros,
+    fold halves pairwise with two-sum (log2 depth), collapse to s + c.
+    Every consumer (kernel wrappers, batched vmap rule, cross-device
+    collectives) folds through this same order.
+    """
+    s = s.reshape(-1)
+    c = c.reshape(-1)
+    n = s.shape[0]
+    p2 = 1 << (n - 1).bit_length()
+    if p2 != n:
+        s = jnp.concatenate([s, jnp.zeros((p2 - n,), s.dtype)])
+        c = jnp.concatenate([c, jnp.zeros((p2 - n,), c.dtype)])
+    while s.shape[0] > 1:
+        half = s.shape[0] // 2
+        s, c = K.kahan_combine(s[:half], c[:half], s[half:], c[half:])
+    return s[0] + c[0]
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompensatedReduction:
+    """Shared padding / promotion / blocking / merge policy for the
+    compensated reductions.
+
+    mode      dot: naive | kahan | dot2; asum/matmul: naive | kahan
+    unroll    accumulator-group count U; kernel block is (8*U, 128)
+    interpret None -> ``resolve_interpret`` (Mosaic only on TPU)
+    """
+
+    mode: str = "kahan"
+    unroll: int = 8
+    interpret: Optional[bool] = None
+
+    @property
+    def block(self) -> int:
+        return SUBLANES * self.unroll * LANES
+
+    def _interpret(self) -> bool:
+        return resolve_interpret(self.interpret)
+
+    # -- promotion + padding (the one place) --------------------------------
+    def _prep1d(self, x: jax.Array) -> jax.Array:
+        """Ravel, promote to COMPUTE_DTYPE, zero-pad to the kernel block.
+
+        Promotion happens BEFORE padding: fp16/bf16 inputs are widened
+        once and the pad allocates fp32 directly (no low-precision
+        intermediate copy); zero padding is exact in either order.
+        """
+        x = jnp.ravel(x).astype(COMPUTE_DTYPE)
+        pad = (-x.shape[0]) % self.block
+        if pad or x.shape[0] == 0:
+            pad = pad or self.block  # empty input -> one zero block (sum 0.0)
+            x = jnp.concatenate([x, jnp.zeros((pad,), COMPUTE_DTYPE)])
+        return x
+
+    def _prep2d(self, x: jax.Array) -> jax.Array:
+        """[batch, ...] -> [batch, n_padded] fp32 (same policy, one pad
+        shared by every batch row)."""
+        x = x.reshape(x.shape[0], -1).astype(COMPUTE_DTYPE)
+        pad = (-x.shape[1]) % self.block
+        if pad or x.shape[1] == 0:
+            pad = pad or self.block  # empty rows -> one zero block (sum 0.0)
+            x = jnp.concatenate(
+                [x, jnp.zeros((x.shape[0], pad), COMPUTE_DTYPE)], axis=1)
+        return x
+
+    # -- accumulator producers ----------------------------------------------
+    def dot_accumulators(self, a: jax.Array, b: jax.Array) -> Accumulator:
+        if a.size != b.size:
+            raise ValueError(
+                f"dot operands must have equal size: {a.shape} vs {b.shape}")
+        a, b = self._prep1d(a), self._prep1d(b)
+        s, c = _kd.dot_accumulators(a, b, mode=self.mode, unroll=self.unroll,
+                                    interpret=self._interpret())
+        return Accumulator(s, c)
+
+    def sum_accumulators(self, x: jax.Array) -> Accumulator:
+        x = self._prep1d(x)
+        s, c = _ks.sum_accumulators(x, mode=self.mode, unroll=self.unroll,
+                                    interpret=self._interpret())
+        return Accumulator(s, c)
+
+    def batched_dot_accumulators(self, a: jax.Array, b: jax.Array,
+                                 ) -> Accumulator:
+        if a.shape != b.shape:
+            raise ValueError(
+                f"batched_dot operands must match: {a.shape} vs {b.shape}")
+        a, b = self._prep2d(a), self._prep2d(b)
+        s, c = _kd.dot_accumulators_batched(
+            a, b, mode=self.mode, unroll=self.unroll,
+            interpret=self._interpret())
+        return Accumulator(s, c)
+
+    def batched_sum_accumulators(self, x: jax.Array) -> Accumulator:
+        x = self._prep2d(x)
+        s, c = _ks.sum_accumulators_batched(
+            x, mode=self.mode, unroll=self.unroll,
+            interpret=self._interpret())
+        return Accumulator(s, c)
+
+    # -- collapsed results ---------------------------------------------------
+    def dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Compensated dot of two arrays (raveled). fp32 scalar.
+        ``jax.vmap`` dispatches to the batched grid (custom_vmap rule)."""
+        return _vmappable_dot(self.mode, self.unroll, self.interpret)(a, b)
+
+    def asum(self, x: jax.Array) -> jax.Array:
+        """Compensated sum of an array (raveled). fp32 scalar.
+        ``jax.vmap`` dispatches to the batched grid (custom_vmap rule)."""
+        return _vmappable_asum(self.mode, self.unroll, self.interpret)(x)
+
+    def batched_dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """[batch, n] x [batch, n] -> [batch] fp32, one Pallas grid
+        (batch, steps). Bitwise-equal to a Python loop of ``dot`` calls."""
+        return self.batched_dot_accumulators(a, b).total()
+
+    def batched_asum(self, x: jax.Array) -> jax.Array:
+        """[batch, n] -> [batch] fp32, one Pallas grid (batch, steps).
+        Bitwise-equal to a Python loop of ``asum`` calls."""
+        return self.batched_sum_accumulators(x).total()
+
+    # -- matmul --------------------------------------------------------------
+    def matmul(self, a: jax.Array, b: jax.Array, *, block_m: int = 256,
+               block_n: int = 256, block_k: int = 512) -> jax.Array:
+        """C = A @ B, compensated inter-K-tile accumulation, fp32 output.
+
+        Same promotion policy (inputs widened to COMPUTE_DTYPE before
+        padding); the (s, c) pair lives per output tile inside the kernel
+        and collapses to ``s + c`` on the last K step (same contract).
+        """
+        m, k = a.shape
+        k2, n = b.shape
+        assert k == k2, f"contraction mismatch {k} vs {k2}"
+        block_m = min(block_m, _round_up(m, 8))
+        block_n = min(block_n, _round_up(n, 128))
+        block_k = min(block_k, _round_up(k, 128))
+        a = a.astype(COMPUTE_DTYPE)
+        b = b.astype(COMPUTE_DTYPE)
+        pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
+        if pm or pk:
+            a = jnp.pad(a, ((0, pm), (0, pk)))
+        if pk or pn:
+            b = jnp.pad(b, ((0, pk), (0, pn)))
+        out = _km.matmul(a, b, block_m=block_m, block_n=block_n,
+                         block_k=block_k, mode=self.mode,
+                         interpret=self._interpret())
+        return out[:m, :n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# vmap dispatch: scalar entry points batch onto the (batch, steps) grid
+# ---------------------------------------------------------------------------
+
+def _flatten_batch(x: jax.Array, axis_size: int) -> jax.Array:
+    """Batched operand [axis_size, *rest] -> [axis_size, prod(rest)]."""
+    assert x.shape[0] == axis_size
+    return x.reshape(axis_size, -1)
+
+
+@functools.lru_cache(maxsize=None)
+def _vmappable_dot(mode: str, unroll: int, interpret: Optional[bool]):
+    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+
+    @jax.custom_batching.custom_vmap
+    def _dot(a, b):
+        return eng.dot_accumulators(a, b).total()
+
+    @_dot.def_vmap
+    def _dot_vmap(axis_size, in_batched, a, b):
+        a_b, b_b = in_batched
+        if not a_b:
+            a = jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+        if not b_b:
+            b = jnp.broadcast_to(b[None], (axis_size,) + b.shape)
+        out = eng.batched_dot(_flatten_batch(a, axis_size),
+                              _flatten_batch(b, axis_size))
+        return out, True
+
+    return _dot
+
+
+@functools.lru_cache(maxsize=None)
+def _vmappable_asum(mode: str, unroll: int, interpret: Optional[bool]):
+    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+
+    @jax.custom_batching.custom_vmap
+    def _asum(x):
+        return eng.sum_accumulators(x).total()
+
+    @_asum.def_vmap
+    def _asum_vmap(axis_size, in_batched, x):
+        if not in_batched[0]:
+            x = jnp.broadcast_to(x[None], (axis_size,) + x.shape)
+        return eng.batched_asum(_flatten_batch(x, axis_size)), True
+
+    return _asum

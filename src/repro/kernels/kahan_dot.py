@@ -66,16 +66,20 @@ def _dot2_update(s, c, x, y):
 
 
 def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
-                grid_steps: int):
-    g = pl.program_id(0)
+                grid_steps: int, step_dim: int = 0):
+    """Shared body for the single grid (steps,) and the batched grid
+    (batch, steps). Batched block refs carry a leading length-1 batch dim;
+    the reshape to the scratch shape strips/restores it. ``step_dim``
+    selects which grid axis is the sequential reduction."""
+    g = pl.program_id(step_dim)
 
     @pl.when(g == 0)
     def _init():
         s_acc[...] = jnp.zeros_like(s_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
+    a = a_ref[...].reshape(s_acc.shape).astype(jnp.float32)
+    b = b_ref[...].reshape(s_acc.shape).astype(jnp.float32)
     s = s_acc[...]
     c = c_acc[...]
     if mode == "naive":
@@ -91,8 +95,8 @@ def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
 
     @pl.when(g == grid_steps - 1)
     def _emit():
-        s_out[...] = s_acc[...]
-        c_out[...] = c_acc[...]
+        s_out[...] = s_acc[...].reshape(s_out.shape)
+        c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
@@ -133,4 +137,52 @@ def dot_accumulators(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
         ],
         interpret=interpret,
     )(a2, b2)
+    return s, c
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
+def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
+                             mode: str = "kahan", unroll: int = 8,
+                             interpret: bool = True,
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Batched dot kernel: one (batch, steps) Pallas grid.
+
+    ``a``/``b``: [batch, n], padded by the caller to n % (8*unroll*128)
+    == 0. Returns [batch, rows, LANES] (s, c) grids. The steps axis is the
+    inner (sequential) grid dimension, so the VMEM scratch accumulators
+    are re-initialized at step 0 of each batch row and each row executes
+    the exact rounding sequence of a single ``dot_accumulators`` call —
+    bitwise-equal to a Python loop of kernel calls, minus the per-call
+    dispatch and pipeline drain.
+    """
+    rows = SUBLANES * unroll
+    batch, n = a.shape
+    assert n % (rows * LANES) == 0, "caller must pad"
+    steps = n // (rows * LANES)
+    a3 = a.reshape(batch, steps * rows, LANES)
+    b3 = b.reshape(batch, steps * rows, LANES)
+
+    kernel = functools.partial(_dot_kernel, mode=mode, grid_steps=steps,
+                               step_dim=1)
+    s, c = pl.pallas_call(
+        kernel,
+        grid=(batch, steps),
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, g, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a3, b3)
     return s, c

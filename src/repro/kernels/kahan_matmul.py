@@ -15,6 +15,13 @@ tiles; ``kahan_matmul`` is the drop-in used by the compensated serving path.
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics — sequential),
 M/N parallel. Accumulators (s, c) live in VMEM scratch, one pair per
 (bm, bn) output tile; they are re-initialized whenever k == 0.
+
+Engine contract: padding, fp32 promotion, and block clamping live in
+``repro.kernels.engine.CompensatedReduction.matmul`` — callers go through
+the engine (or ``ops.matmul``), not this kernel directly. The (s, c) pair
+follows the shared ``total = s + c`` convention and collapses in-kernel
+on the last K step (the cross-tile merge needs no tree here because each
+output tile owns exactly one accumulator pair).
 """
 
 from __future__ import annotations

@@ -19,15 +19,17 @@ from repro.kernels.kahan_dot import LANES, SUBLANES, _kahan_update
 
 
 def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
-                grid_steps: int):
-    g = pl.program_id(0)
+                grid_steps: int, step_dim: int = 0):
+    """Shared body for the single (steps,) and batched (batch, steps)
+    grids — see ``kahan_dot._dot_kernel`` for the reshape convention."""
+    g = pl.program_id(step_dim)
 
     @pl.when(g == 0)
     def _init():
         s_acc[...] = jnp.zeros_like(s_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[...].reshape(s_acc.shape).astype(jnp.float32)
     s = s_acc[...]
     c = c_acc[...]
     if mode == "naive":
@@ -41,8 +43,8 @@ def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
 
     @pl.when(g == grid_steps - 1)
     def _emit():
-        s_out[...] = s_acc[...]
-        c_out[...] = c_acc[...]
+        s_out[...] = s_acc[...].reshape(s_out.shape)
+        c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
@@ -74,4 +76,44 @@ def sum_accumulators(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
         ],
         interpret=interpret,
     )(x2)
+    return s, c
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
+def sum_accumulators_batched(x: jax.Array, *, mode: str = "kahan",
+                             unroll: int = 8, interpret: bool = True,
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Batched sum kernel: one (batch, steps) Pallas grid.
+
+    ``x``: [batch, n] padded to n % (8*unroll*128) == 0. Returns
+    [batch, rows, LANES] (s, c) grids; each batch row executes the exact
+    rounding sequence of a single ``sum_accumulators`` call (see
+    ``kahan_dot.dot_accumulators_batched``).
+    """
+    rows = SUBLANES * unroll
+    batch, n = x.shape
+    assert n % (rows * LANES) == 0, "caller must pad"
+    steps = n // (rows * LANES)
+    x3 = x.reshape(batch, steps * rows, LANES)
+
+    kernel = functools.partial(_sum_kernel, mode=mode, grid_steps=steps,
+                               step_dim=1)
+    s, c = pl.pallas_call(
+        kernel,
+        grid=(batch, steps),
+        in_specs=[pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, g, 0))],
+        out_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x3)
     return s, c

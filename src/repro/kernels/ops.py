@@ -1,10 +1,21 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels — thin veneer over the engine.
 
-On a TPU backend the kernels compile to Mosaic; everywhere else they run in
-``interpret=True`` mode (the kernel body executes as jnp ops — identical
-rounding behavior, so oracles match bitwise). The framework's model code
-calls these wrappers; configs flip ``use_pallas`` to swap the jnp reference
-path in for lowering/AOT work (pallas_call does not lower for a CPU mesh).
+All padding, dtype promotion (inputs widen to fp32 once, before padding),
+blocking, interpret-mode resolution, and accumulator merging live in
+``repro.kernels.engine.CompensatedReduction``; these functions only give
+the engine a flat, call-site-friendly surface.
+
+Accumulator contract (see engine docstring): every reduction carries an
+``(s, c)`` pair with ``total = s + c``; grids collapse through one
+deterministic two-sum tree (``engine.merge_accumulators``), the same fold
+used cross-batch (vmap) and cross-device (distributed collectives).
+
+On a TPU backend the kernels compile to Mosaic; everywhere else they run
+in ``interpret=True`` mode (the kernel body executes as jnp ops —
+identical rounding behavior, so oracles match bitwise). ``jax.vmap`` of
+``dot``/``asum`` dispatches to the batched (batch, steps) Pallas grid via
+the engine's custom_vmap rule instead of falling back to a per-element
+loop.
 """
 
 from __future__ import annotations
@@ -12,80 +23,50 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import kahan_dot as _kd
-from repro.kernels import kahan_matmul as _km
-from repro.kernels import kahan_sum as _ks
 from repro.kernels import ref as _ref
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad1d(x: jax.Array, multiple: int) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % multiple
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-    return x
+from repro.kernels.engine import CompensatedReduction
 
 
 def dot(a: jax.Array, b: jax.Array, *, mode: str = "kahan", unroll: int = 8,
         interpret: bool | None = None) -> jax.Array:
-    """Compensated dot product of two 1-D arrays (fp32 result)."""
-    if interpret is None:
-        interpret = _interpret_default()
-    a = jnp.ravel(a)
-    b = jnp.ravel(b)
-    block = _kd.SUBLANES * unroll * _kd.LANES
-    a = _pad1d(a, block)
-    b = _pad1d(b, block)
-    s, c = _kd.dot_accumulators(a, b, mode=mode, unroll=unroll,
-                                interpret=interpret)
-    return _ref.merge_accumulators(s, c)
+    """Compensated dot product of two arrays (raveled; fp32 compute and
+    result). vmap-aware: batching lands on the (batch, steps) grid."""
+    return CompensatedReduction(mode=mode, unroll=unroll,
+                                interpret=interpret).dot(a, b)
 
 
 def asum(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
          interpret: bool | None = None) -> jax.Array:
-    """Compensated sum of an array (fp32 result)."""
-    if interpret is None:
-        interpret = _interpret_default()
-    x = jnp.ravel(x)
-    block = _kd.SUBLANES * unroll * _kd.LANES
-    x = _pad1d(x, block)
-    s, c = _ks.sum_accumulators(x, mode=mode, unroll=unroll,
-                                interpret=interpret)
-    return _ref.merge_accumulators(s, c)
+    """Compensated sum of an array (raveled; fp32 compute and result).
+    vmap-aware: batching lands on the (batch, steps) grid."""
+    return CompensatedReduction(mode=mode, unroll=unroll,
+                                interpret=interpret).asum(x)
+
+
+def batched_dot(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
+                unroll: int = 8, interpret: bool | None = None) -> jax.Array:
+    """[batch, n] x [batch, n] -> [batch] compensated dots as ONE Pallas
+    grid (batch, steps) — bitwise-equal to a loop of ``dot`` calls."""
+    return CompensatedReduction(mode=mode, unroll=unroll,
+                                interpret=interpret).batched_dot(a, b)
+
+
+def batched_asum(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
+                 interpret: bool | None = None) -> jax.Array:
+    """[batch, n] -> [batch] compensated sums as ONE Pallas grid
+    (batch, steps) — bitwise-equal to a loop of ``asum`` calls."""
+    return CompensatedReduction(mode=mode, unroll=unroll,
+                                interpret=interpret).batched_asum(x)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
            block_n: int = 256, block_k: int = 512, mode: str = "kahan",
            interpret: bool | None = None) -> jax.Array:
-    """C = A @ B with compensated inter-K-tile accumulation (fp32 result).
-
-    Pads M/N/K to block multiples and slices the result back.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    m, k = a.shape
-    _, n = b.shape
-    block_m = min(block_m, _round_up(m, 8))
-    block_n = min(block_n, _round_up(n, 128))
-    block_k = min(block_k, _round_up(k, 128))
-    pm, pn, pk = (-m) % block_m, (-n) % block_n, (-k) % block_k
-    if pm or pk:
-        a = jnp.pad(a, ((0, pm), (0, pk)))
-    if pk or pn:
-        b = jnp.pad(b, ((0, pk), (0, pn)))
-    out = _km.matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
-                     mode=mode, interpret=interpret)
-    return out[:m, :n]
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
+    """C = A @ B with compensated inter-K-tile accumulation (fp32 compute
+    and result). Pads M/N/K to block multiples and slices back."""
+    return CompensatedReduction(mode=mode, interpret=interpret).matmul(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k)
 
 
 # Convenience: jnp-only fallbacks with identical semantics, used by model

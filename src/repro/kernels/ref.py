@@ -4,14 +4,20 @@ Each function mirrors the *exact accumulation semantics* of its kernel so
 that interpret-mode kernel output can be compared with tight tolerances
 (ideally bitwise for the compensated variants, since both execute the same
 rounding sequence per lane).
+
+The accumulator merge policy is owned by ``repro.kernels.engine``;
+``merge_accumulators`` is re-exported here for back-compat.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import kahan as K
+from repro.kernels.engine import merge_accumulators  # noqa: F401  (re-export)
 
 
 def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
@@ -87,24 +93,19 @@ def sum_ref(x: jax.Array, mode: str = "kahan",
     return merge_accumulators(s, c)
 
 
-def merge_accumulators(s: jax.Array, c: jax.Array) -> jax.Array:
-    """Deterministic compensated merge of a (rows, lanes) accumulator grid.
+def batched_dot_ref(a: jax.Array, b: jax.Array, mode: str = "kahan",
+                    rows: int = 8, lanes: int = 128) -> jax.Array:
+    """Oracle for the batched dot grid: vmap of the single oracle over the
+    leading batch axis — per row, the identical rounding sequence."""
+    fn = functools.partial(dot_ref, mode=mode, rows=rows, lanes=lanes)
+    return jax.vmap(fn)(a, b)
 
-    Same order as the kernel wrappers: fold rows pairwise (log2 tree), then
-    lanes pairwise, then collapse.
-    """
-    s = s.reshape(-1)
-    c = c.reshape(-1)
-    n = s.shape[0]
-    # pad to a power of two with exact zeros
-    p2 = 1 << (n - 1).bit_length()
-    if p2 != n:
-        s = jnp.concatenate([s, jnp.zeros((p2 - n,), s.dtype)])
-        c = jnp.concatenate([c, jnp.zeros((p2 - n,), c.dtype)])
-    while s.shape[0] > 1:
-        half = s.shape[0] // 2
-        s, c = K.kahan_combine(s[:half], c[:half], s[half:], c[half:])
-    return s[0] + c[0]
+
+def batched_sum_ref(x: jax.Array, mode: str = "kahan",
+                    rows: int = 8, lanes: int = 128) -> jax.Array:
+    """Oracle for the batched sum grid (see ``batched_dot_ref``)."""
+    fn = functools.partial(sum_ref, mode=mode, rows=rows, lanes=lanes)
+    return jax.vmap(fn)(x)
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,

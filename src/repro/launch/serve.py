@@ -1,7 +1,13 @@
 """Serving launcher: batched generation over the model-zoo API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        [--batch 4] [--new-tokens 32]
+        [--batch 4] [--new-tokens 32] [--stats]
+
+``--stats`` turns on the compensated telemetry path: per-request squared
+logit norms computed with the engine's batched (batch, steps) Pallas grid
+(``models.layers.activation_sq_norm`` — the ``(s, c)`` accumulator
+contract with the deterministic two-sum merge), one kernel launch per
+decode step for the whole batch.
 """
 
 import argparse
@@ -21,10 +27,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print compensated per-request logit norms")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    server = Server(cfg, ServeConfig(temperature=args.temperature))
+    server = Server(cfg, ServeConfig(temperature=args.temperature,
+                                     track_stats=args.stats))
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
@@ -38,6 +47,11 @@ def main():
     out = server.generate(batch, args.new_tokens)
     for i, row in enumerate(np.asarray(out)):
         print(f"request {i}: {row.tolist()}")
+    if args.stats and server.last_stats:
+        norms = np.stack([np.asarray(s) for s in server.last_stats])  # [T,B]
+        for i in range(norms.shape[1]):
+            print(f"request {i}: |logits|^2 (kahan) "
+                  f"first={norms[0, i]:.6e} last={norms[-1, i]:.6e}")
 
 
 if __name__ == "__main__":

@@ -507,3 +507,39 @@ def mlp_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
         return dense(p["down"], g * u, cd)
     h = jax.nn.gelu(dense(p["up"], x, cd).astype(jnp.float32)).astype(cd)
     return dense(p["down"], h, cd)
+
+
+# ---------------------------------------------------------------------------
+# Compensated activation telemetry (engine-backed)
+# ---------------------------------------------------------------------------
+
+def activation_sq_norm(x: jax.Array, *, mode: str = "kahan",
+                       mesh=None, axis: str = "data",
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Per-request compensated squared L2 norm of an activation tensor.
+
+    ``x``: [B, ...] (logits, hidden states). Returns [B] fp32 via the
+    engine's batched (batch, steps) Pallas grid — one kernel launch for
+    the whole batch, bitwise-equal to a per-request loop. This is the
+    serving/training telemetry hook: drift in these norms is the cheapest
+    early signal of numerical divergence between precision configs.
+
+    With ``mesh``/``axis`` given, ``x`` is treated as batch-sharded over
+    that mesh axis and each device reduces only its local requests; the
+    result stays sharded like the batch (no cross-device fold is needed —
+    the norm is per-request). For *scalar* cross-device reductions use
+    ``repro.distributed.collectives.sharded_asum``, which all-gathers the
+    (s, c) grids and applies the deterministic two-sum tree.
+    """
+    from repro.kernels.engine import CompensatedReduction
+
+    eng = CompensatedReduction(mode=mode, interpret=interpret)
+    flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    sq = flat * flat
+    if mesh is not None:
+        from repro.core import compat
+
+        return compat.shard_map(
+            eng.batched_asum, mesh=mesh, in_specs=P(axis),
+            out_specs=P(axis), check_vma=False)(sq)
+    return eng.batched_asum(sq)

@@ -36,6 +36,7 @@ def make_decode_step(model) -> Callable:
 class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0     # 0 = greedy
+    track_stats: bool = False    # compensated per-request logit telemetry
 
 
 class Server:
@@ -49,17 +50,28 @@ class Server:
         self._prefill = jax.jit(make_prefill_step(self.model))
         self._decode = jax.jit(make_decode_step(self.model),
                                donate_argnums=(1,))
+        # [B] compensated squared logit norms per emitted step (engine's
+        # batched grid: one kernel launch per step for the whole batch)
+        self.last_stats: list = []
 
     def generate(self, batch: Dict[str, jax.Array], n_new: int,
                  key: Optional[jax.Array] = None) -> jnp.ndarray:
         """batch: model inputs incl. "tokens" [B, S]. Returns [B, n_new]."""
+        from repro.models.layers import activation_sq_norm
+
         b, s = batch["tokens"].shape
         cache, _ = self.model.init_cache(b, s + n_new)
         logits, cache = self._prefill(self.params, batch, cache)
         outs = []
+        self.last_stats = []
         tok = self._sample(logits, key, 0)
         for i in range(n_new):
             outs.append(tok)
+            if self.sc.track_stats:
+                # valid-vocab slice only: the padded region carries a
+                # -1e30 mask bias whose square overflows fp32
+                self.last_stats.append(
+                    activation_sq_norm(logits[:, :self.cfg.vocab_size]))
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.asarray(s + i))
             tok = self._sample(logits, key, i + 1)

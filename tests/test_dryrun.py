@@ -12,6 +12,7 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
 def test_dryrun_cell_compiles(tmp_path, mesh_flag):
     """xlstm decode_32k is the fastest-compiling cell (~5 s)."""

@@ -3,6 +3,7 @@ unfailed loss trajectory exactly (deterministic data + checkpointed state)."""
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.data import DataConfig, SyntheticLM
@@ -21,6 +22,7 @@ def _mk(ckpt_dir, failure_hook=None, steps=12):
     return Trainer(cfg, tc, data, failure_hook=failure_hook)
 
 
+@pytest.mark.slow
 def test_crash_restart_resumes_exact_trajectory(tmp_path):
     # reference run, no failures
     ref = _mk(str(tmp_path / "ref"))
@@ -39,6 +41,7 @@ def test_crash_restart_resumes_exact_trajectory(tmp_path):
     assert abs(ft_losses[12] - ref_losses[12]) < 1e-6
 
 
+@pytest.mark.slow
 def test_resume_skips_completed_steps(tmp_path):
     t1 = _mk(str(tmp_path), steps=8)
     t1.run()

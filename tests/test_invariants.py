@@ -1,5 +1,7 @@
-"""System-invariant property tests: MoE routing, ring-buffer cache
-equivalence, chunked-CE correctness, accumulator algebra."""
+"""System-invariant tests: MoE routing, ring-buffer cache equivalence,
+chunked-CE correctness. The hypothesis accumulator-algebra property test
+lives in test_properties.py (collected only when hypothesis is
+installed — the seed environment does not ship it)."""
 
 import dataclasses
 
@@ -7,11 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.configs import get_smoke
-from repro.core.kahan import KahanAccumulator
 from repro.models import layers as L
 from repro.models.common import chunked_ce_loss
 from repro.models.moe import moe_apply, moe_init
@@ -42,6 +41,7 @@ def test_moe_identity_experts_preserve_scale():
     np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_moe_dropless_at_high_capacity():
     cfg = _moe_cfg(capacity_factor=16.0)
     p, _ = moe_init(jax.random.key(0), cfg)
@@ -51,6 +51,7 @@ def test_moe_dropless_at_high_capacity():
     assert float(metrics["dropped_frac"]) == 0.0
 
 
+@pytest.mark.slow
 def test_moe_permutation_equivariance():
     """Permuting tokens within a routing group permutes outputs (dropless
     regime) — routing is position-independent."""
@@ -139,24 +140,3 @@ def test_chunked_ce_padded_vocab_never_predicted():
     assert float(sum_loss) / 4 < 50.0
 
 
-# --- accumulator algebra ------------------------------------------------------
-
-@given(st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
-                          allow_subnormal=False, width=32),
-                min_size=2, max_size=40))
-@settings(max_examples=50, deadline=None)
-def test_accumulator_split_merge_consistency(xs):
-    """add-all == merge(add-half, add-half) up to fp32 noise of the total."""
-    half = len(xs) // 2
-    a = KahanAccumulator.zeros_like(jnp.zeros(()))
-    for x in xs:
-        a = a.add(jnp.float32(x))
-    b1 = KahanAccumulator.zeros_like(jnp.zeros(()))
-    for x in xs[:half]:
-        b1 = b1.add(jnp.float32(x))
-    b2 = KahanAccumulator.zeros_like(jnp.zeros(()))
-    for x in xs[half:]:
-        b2 = b2.add(jnp.float32(x))
-    merged = b1.merge(b2)
-    scale = max(sum(abs(float(np.float32(x))) for x in xs), 1.0)
-    assert abs(float(a.total()) - float(merged.total())) <= 1e-5 * scale

@@ -31,6 +31,7 @@ def make_batch(cfg, b=2, s=32, key=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_train_step(arch):
     cfg = get_smoke(arch)
@@ -52,6 +53,7 @@ def test_smoke_train_step(arch):
     assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_serve_roundtrip(arch):
     cfg = get_smoke(arch)
@@ -69,6 +71,7 @@ def test_smoke_serve_roundtrip(arch):
     assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch}: decode logits"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["olmo-1b", "qwen2.5-3b", "hymba-1.5b",
                                   "xlstm-1.3b", "deepseek-v2-lite-16b"])
 def test_decode_matches_prefill(arch):

@@ -1,0 +1,89 @@
+"""Hypothesis property tests (EFT invariants, accumulator algebra).
+
+Collected ONLY when ``hypothesis`` is installed — the seed container does
+not ship it, and an unconditional import used to kill tier-1 collection
+for the whole suite. Everything deterministic stays in test_kahan_core.py
+/ test_invariants.py; this module is the optional property-based layer.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core import kahan as K  # noqa: E402
+from repro.core.kahan import KahanAccumulator  # noqa: E402
+
+f32 = st.floats(min_value=-float(2 ** 40), max_value=float(2 ** 40),
+                allow_nan=False, allow_infinity=False, allow_subnormal=False,
+                width=32)
+
+
+@given(f32, f32)
+@settings(max_examples=200, deadline=None)
+def test_two_sum_exact(a, b):
+    """two_sum is an error-free transformation: a + b == s + e EXACTLY
+    (verified in exact rational arithmetic via Fraction). fp32 here — JAX
+    x64 is off and the property is precision-independent."""
+    from fractions import Fraction
+
+    a = float(np.float32(a))
+    b = float(np.float32(b))
+    s, e = K.two_sum(jnp.float32(a), jnp.float32(b))
+    s, e = float(s), float(e)
+    assert Fraction(a) + Fraction(b) == Fraction(s) + Fraction(e)
+
+
+@given(f32, f32)
+@settings(max_examples=100, deadline=None)
+def test_two_sum_matches_fast_two_sum_when_ordered(a, b):
+    hi, lo = (a, b) if abs(a) >= abs(b) else (b, a)
+    s1, e1 = K.two_sum(jnp.float32(hi), jnp.float32(lo))
+    s2, e2 = K.fast_two_sum(jnp.float32(hi), jnp.float32(lo))
+    assert float(s1) == float(s2)
+    assert float(e1) == float(e2)
+
+
+@given(st.floats(min_value=-float(2 ** 30), max_value=float(2 ** 30),
+                 allow_nan=False, allow_subnormal=False, width=32),
+       st.floats(min_value=-float(2 ** 30), max_value=float(2 ** 30),
+                 allow_nan=False, allow_subnormal=False, width=32))
+@settings(max_examples=200, deadline=None)
+def test_two_prod_exact_fp32(a, b):
+    """two_prod: a*b == p + e exactly (fp32 products are exact in fp64).
+
+    Veltkamp splitting requires the error term not to underflow — products
+    near the subnormal boundary are excluded (|a*b| > 2^-70 keeps the
+    e ~ eps*|ab| term in normal range with margin)."""
+    from hypothesis import assume
+
+    assume(a == 0.0 or b == 0.0 or abs(float(a) * float(b)) > 2.0 ** -70)
+    p, e = K.two_prod(jnp.float32(a), jnp.float32(b))
+    assert float(np.float64(a) * np.float64(b)) == float(p) + float(e) or \
+        abs((np.float64(a) * np.float64(b) - (float(p) + float(e)))
+            / max(1e-30, abs(np.float64(a) * np.float64(b)))) < 1e-14
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                          allow_subnormal=False, width=32),
+                min_size=2, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_accumulator_split_merge_consistency(xs):
+    """add-all == merge(add-half, add-half) up to fp32 noise of the total."""
+    half = len(xs) // 2
+    a = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs:
+        a = a.add(jnp.float32(x))
+    b1 = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs[:half]:
+        b1 = b1.add(jnp.float32(x))
+    b2 = KahanAccumulator.zeros_like(jnp.zeros(()))
+    for x in xs[half:]:
+        b2 = b2.add(jnp.float32(x))
+    merged = b1.merge(b2)
+    scale = max(sum(abs(float(np.float32(x))) for x in xs), 1.0)
+    assert abs(float(a.total()) - float(merged.total())) <= 1e-5 * scale

@@ -20,6 +20,7 @@ def _tc(steps=30, **kw):
                        **kw)
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_markov_data():
     cfg = get_smoke("olmo-1b").replace(loss_chunk=32)
     data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
@@ -30,6 +31,7 @@ def test_loss_decreases_on_markov_data():
     assert losses[-1] < losses[0] - 0.2, losses
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     """4 microbatches with compensated accumulation == single batch step
     (up to fp32 noise): grads are identical in expectation; with kahan
