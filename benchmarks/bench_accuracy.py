@@ -1,8 +1,11 @@
 """Accuracy-vs-condition-number table (the paper's motivation).
 
-Columns: condition number; relative error of naive / Kahan / Dot2 fp32 dot
-product on GenDot data (Ogita et al.) — the quantitative version of "why
-compensate at all". Kernel-path (interpret-mode Pallas) results.
+Registry-driven: the sweep iterates EVERY scheme registered in
+``repro.kernels.schemes`` (naive / kahan / pairwise / dot2 today; any
+scheme registered later appears in the table with no edits here), and
+prints each scheme's measured relative error next to its a-priori
+``error_bound`` — the quantitative version of "why compensate at all".
+Kernel-path (interpret-mode Pallas) results.
 """
 
 import jax.numpy as jnp
@@ -10,42 +13,47 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import numerics
-from repro.kernels import ops
+from repro.kernels import ops, schemes
 
 
 def main(n: int = 1 << 14) -> None:
+    reg = schemes.registered()
+    names = list(reg)
     print("# DOT accuracy vs ACHIEVED condition number (GenDot; x-axis is "
           "the achieved cond — the generator's request scales by ~n).")
-    print("# Kahan compensates the SUM only; the product-rounding floor "
-          "(eps*cond/2) limits any dot that rounds a_i*b_i — dot2 "
-          "(two_prod) removes it. This matches the paper's framing: the "
-          "accuracy contribution is in the accumulation.")
-    print("# cond_achieved,naive,kahan,dot2")
+    print("# Compensated-sum schemes (kahan/pairwise) still round the "
+          "products, leaving the eps*cond/2 floor; dot2 (TwoProd) removes "
+          "it. This matches the paper's framing: the accuracy contribution "
+          "is in the accumulation.")
+    print("# cond_achieved," + ",".join(
+        f"{m},{m}_bound" for m in names))
     for cond in (1e1, 1e2, 1e4, 1e6):
         a, b, exact, achieved = numerics.gen_dot(n, cond, seed=int(cond))
-        errs = {}
-        for mode in ("naive", "kahan", "dot2"):
-            got = ops.dot(jnp.asarray(a), jnp.asarray(b), mode=mode,
+        cells = []
+        derived = []
+        for name, scheme in reg.items():
+            got = ops.dot(jnp.asarray(a), jnp.asarray(b), scheme=scheme,
                           unroll=1)
-            errs[mode] = numerics.relative_error(float(got), exact)
-        print(f"{achieved:.2e},{errs['naive']:.3e},"
-              f"{errs['kahan']:.3e},{errs['dot2']:.3e}")
-        emit(f"accuracy_dot_cond{achieved:.0e}", 0.0,
-             f"naive={errs['naive']:.1e};kahan={errs['kahan']:.1e};"
-             f"dot2={errs['dot2']:.1e}")
+            err = numerics.relative_error(float(got), exact)
+            bound = scheme.error_bound(n, achieved)
+            cells.append(f"{err:.3e},{bound:.1e}")
+            derived.append(f"{name}={err:.1e}")
+        print(f"{achieved:.2e}," + ",".join(cells))
+        emit(f"accuracy_dot_cond{achieved:.0e}", 0.0, ";".join(derived))
 
-    print("# SUM accuracy (no product floor): naive vs kahan kernel, "
+    print("# SUM accuracy (no product floor), registry sweep, "
           "sequential-lane layout (unroll=1)")
-    print("# cond_achieved,naive,kahan")
+    print("# cond_achieved," + ",".join(names))
     for cond in (1e2, 1e4, 1e6):
         x, exact, achieved = numerics.gen_sum(n, cond, seed=int(cond) + 1)
-        e_n = numerics.relative_error(
-            float(ops.asum(jnp.asarray(x), mode="naive", unroll=1)), exact)
-        e_k = numerics.relative_error(
-            float(ops.asum(jnp.asarray(x), mode="kahan", unroll=1)), exact)
-        print(f"{achieved:.2e},{e_n:.3e},{e_k:.3e}")
+        errs = {
+            name: numerics.relative_error(
+                float(ops.asum(jnp.asarray(x), scheme=scheme, unroll=1)),
+                exact)
+            for name, scheme in reg.items()}
+        print(f"{achieved:.2e}," + ",".join(f"{errs[m]:.3e}" for m in names))
         emit(f"accuracy_sum_cond{achieved:.0e}", 0.0,
-             f"naive={e_n:.1e};kahan={e_k:.1e}")
+             ";".join(f"{m}={errs[m]:.1e}" for m in names))
 
 
 if __name__ == "__main__":

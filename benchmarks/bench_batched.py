@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.kernels import ops
+from repro.kernels import ops, schemes
 
 
 def main(batch: int = 8, n: int = 1 << 16) -> None:
@@ -29,28 +29,28 @@ def main(batch: int = 8, n: int = 1 << 16) -> None:
     total = batch * n
 
     def loop_dot(x, y):
-        return jnp.stack([ops.dot(x[i], y[i], mode="kahan")
+        return jnp.stack([ops.dot(x[i], y[i], scheme="kahan")
                           for i in range(batch)])
 
     def loop_asum(x):
-        return jnp.stack([ops.asum(x[i], mode="kahan")
+        return jnp.stack([ops.asum(x[i], scheme="kahan")
                           for i in range(batch)])
 
-    for mode in ("naive", "kahan", "dot2"):
-        us = time_fn(lambda x, y, m=mode: ops.batched_dot(x, y, mode=m),
+    for name in schemes.names():
+        us = time_fn(lambda x, y, s=name: ops.batched_dot(x, y, scheme=s),
                      a, b)
-        emit(f"batched_dot_{mode}", us, f"{total / us:.1f}Melem/s")
+        emit(f"batched_dot_{name}", us, f"{total / us:.1f}Melem/s")
     us_loop = time_fn(loop_dot, a, b)
     emit("batched_dot_kahan_loop", us_loop, f"{total / us_loop:.1f}Melem/s")
 
-    for mode in ("naive", "kahan"):
-        us = time_fn(lambda x, m=mode: ops.batched_asum(x, mode=m), a)
-        emit(f"batched_asum_{mode}", us, f"{total / us:.1f}Melem/s")
+    for name in schemes.names():
+        us = time_fn(lambda x, s=name: ops.batched_asum(x, scheme=s), a)
+        emit(f"batched_asum_{name}", us, f"{total / us:.1f}Melem/s")
     us_loop = time_fn(loop_asum, a)
     emit("batched_asum_kahan_loop", us_loop, f"{total / us_loop:.1f}Melem/s")
 
     # vmap dispatch sanity: custom_vmap must land on the batched grid
-    vm = jax.jit(jax.vmap(lambda x, y: ops.dot(x, y, mode="kahan")))
+    vm = jax.jit(jax.vmap(lambda x, y: ops.dot(x, y, scheme="kahan")))
     us = time_fn(vm, a, b)
     emit("batched_dot_kahan_vmap", us, f"{total / us:.1f}Melem/s")
 

@@ -2,11 +2,14 @@
 the dot variants.
 
 On x86 the x-axis was L1/L2/L3/memory; on TPU the hierarchy is
-VMEM-resident vs HBM-streamed. We report the ECM-TPU model's cycles/block
-for {naive, kahan(vec), dot2, kahan-seq} x {VMEM, HBM} on v5e, plus a
-measured-on-CPU walltime column for the jnp reference implementations
-(labeled PROXY — CPU wall time validates the *ordering*, not TPU cycle
-counts: vectorized Kahan ~ naive, sequential catastrophically slower).
+VMEM-resident vs HBM-streamed. The variant list is the compensation-scheme
+REGISTRY (``ecm.registry_tpu_blocks`` — naive / kahan / pairwise / dot2
+plus anything registered later, with no edits here), reported as the
+ECM-TPU model's cycles/block on v5e next to a measured-on-CPU walltime
+column for the interpret-mode Pallas kernels (labeled PROXY — CPU wall
+time validates the *ordering*, not TPU cycle counts: vectorized
+compensated variants ~ naive, sequential catastrophically slower). The
+paper's scalar variant keeps its own row (``kahan-seq``).
 """
 
 import jax
@@ -15,45 +18,43 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import ecm, kahan as K
+from repro.kernels import ops
 
 
 def main(n: int = 1 << 18) -> None:
     print("# dot variants: ECM-TPU cycles/block (v5e, 8k-elem block) "
-          "+ CPU proxy walltime")
+          "+ CPU proxy walltime (interpret-mode Pallas kernel)")
     print("# variant,t_core_cy,t_hbm_cy,t_db_cy,perf_GUP/s,bound,cpu_us")
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal(n), jnp.float32)
     b = jnp.asarray(rng.standard_normal(n), jnp.float32)
 
-    impls = {
-        "naive-vec": (ecm.NAIVE_DOT_TPU,
-                      jax.jit(lambda x, y: jnp.dot(x, y))),
-        "kahan-vec": (ecm.KAHAN_DOT_TPU,
-                      jax.jit(lambda x, y: K.kahan_dot(x, y, lanes=1024))),
-        "dot2-vec": (ecm.DOT2_TPU,
-                     jax.jit(lambda x, y: K.kahan_dot2(x, y, lanes=1024))),
-        "kahan-seq": (ecm.KAHAN_DOT_SEQ_TPU,
-                      jax.jit(lambda x, y: K.naive_dot(x, y))),
-    }
-    for name, (kernel, fn) in impls.items():
-        r = ecm.ecm_tpu(ecm.TPU_V5E, kernel)
-        # sequential CPU proxy on the full array is too slow; subsample
-        if name == "kahan-seq":
-            us = time_fn(fn, a[:4096], b[:4096]) * (n / 4096)
-        else:
-            us = time_fn(fn, a, b)
+    # one row per registered scheme — the registry IS the variant list
+    for name, block in ecm.registry_tpu_blocks().items():
+        r = ecm.ecm_tpu(ecm.TPU_V5E, block)
+        us = time_fn(lambda x, y, s=name: ops.dot(x, y, scheme=s), a, b)
         print(f"{name},{r.t_core_cy:.1f},{r.t_hbm_cy:.1f},{r.t_db_cy:.1f},"
               f"{r.perf_db_gups},{r.bound},{us:.1f}")
         emit(f"dot_{name}", us,
              f"ecm_db_cy={r.t_db_cy:.1f};perf={r.perf_db_gups}GUPs;"
              f"bound={r.bound}")
 
+    # the paper's scalar (non-SIMD) variant: element-at-a-time chain
+    r = ecm.ecm_tpu(ecm.TPU_V5E, ecm.KAHAN_DOT_SEQ_TPU)
+    seq = jax.jit(lambda x, y: K.naive_dot(x, y))
+    # sequential CPU proxy on the full array is too slow; subsample
+    us = time_fn(seq, a[:4096], b[:4096]) * (n / 4096)
+    print(f"kahan-seq,{r.t_core_cy:.1f},{r.t_hbm_cy:.1f},{r.t_db_cy:.1f},"
+          f"{r.perf_db_gups},{r.bound},{us:.1f}")
+    emit("dot_kahan-seq", us,
+         f"ecm_db_cy={r.t_db_cy:.1f};perf={r.perf_db_gups}GUPs;"
+         f"bound={r.bound}")
+
     # the unroll sweep (paper's unrolling depth knob; VMEM footprint is the
     # TPU-side constraint, not architectural registers)
     print("# unroll sweep (kahan pallas kernel, interpret): unroll,cpu_us")
-    from repro.kernels import ops
     for unroll in (1, 2, 4, 8):
-        us = time_fn(lambda x, y, u=unroll: ops.dot(x, y, mode="kahan",
+        us = time_fn(lambda x, y, u=unroll: ops.dot(x, y, scheme="kahan",
                                                     unroll=u), a, b)
         emit(f"dot_kahan_unroll{unroll}", us, "interpret-mode")
 

@@ -48,11 +48,11 @@ def main() -> None:
     q = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((bh, s, dh)), jnp.float32)
-    for mode in ("naive", "kahan"):
-        us = time_fn(lambda a, b, c, m=mode: flash_attention(
-            a, b, c, block_q=256, block_k=256, mode=m), q, k, v,
+    for scheme in ("naive", "kahan"):
+        us = time_fn(lambda a, b, c, s_=scheme: flash_attention(
+            a, b, c, block_q=256, block_k=256, scheme=s_), q, k, v,
             warmup=1, iters=3)
-        emit(f"flash_attention_{mode}", us, f"bh={bh},s={s},dh={dh}")
+        emit(f"flash_attention_{scheme}", us, f"bh={bh},s={s},dh={dh}")
 
 
 if __name__ == "__main__":

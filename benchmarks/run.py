@@ -4,7 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus commented context
 blocks). Mapping to the paper:
 
   bench_accuracy        motivation (why compensate): error vs condition
-  bench_dot_variants    Fig. 2 — per-variant cycles across the hierarchy
+                        — registry-driven: sweeps EVERY scheme in
+                        repro.kernels.schemes (+ a-priori bounds)
+  bench_dot_variants    Fig. 2 — per-variant cycles across the
+                        hierarchy (variant list = the scheme registry
+                        via ecm.registry_tpu_blocks)
   bench_batched         batched engine: one (batch, steps) grid vs a
                         per-call loop (the 2016 follow-up's saturation
                         claim, in batched-serving form)

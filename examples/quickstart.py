@@ -19,8 +19,8 @@ def main():
     for name, val in [
         ("naive (sequential)", float(naive_dot(jnp.asarray(a), jnp.asarray(b)))),
         ("kahan (pure jax)", float(kahan_dot(jnp.asarray(a), jnp.asarray(b)))),
-        ("kahan (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), mode="kahan"))),
-        ("dot2  (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), mode="dot2"))),
+        ("kahan (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), scheme="kahan"))),
+        ("dot2  (pallas kernel)", float(ops.dot(jnp.asarray(a), jnp.asarray(b), scheme="dot2"))),
     ]:
         print(f"  {name:24s} {val:.9e}  relerr={numerics.relative_error(val, exact):.2e}")
 
@@ -32,6 +32,7 @@ def main():
           "   (exact: 100004096)")
 
     # 3. The ECM model: why Kahan is free on TPU when vectorized.
+    #    Variant descriptions derive from the scheme registry.
     from repro.core import ecm
     for k in (ecm.NAIVE_DOT_TPU, ecm.KAHAN_DOT_TPU, ecm.KAHAN_DOT_SEQ_TPU):
         r = ecm.ecm_tpu(ecm.TPU_V5E, k)

@@ -4,18 +4,29 @@
 #   scripts/ci.sh            # both stages
 #   scripts/ci.sh fast       # tier-1 only (what the driver runs)
 #   scripts/ci.sh slow       # slow tier only
+#
+# Deprecation gate: both stages run with DeprecationWarning promoted to
+# an error for warnings ATTRIBUTED to repro.* modules (the legacy
+# compensation 'mode=' kwarg warns with a stacklevel that lands on its
+# caller), proving no internal call site still uses the legacy alias.
+# Test call sites that deliberately exercise the alias attribute to the
+# test module and stay warnings (asserted via pytest.warns).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 stage="${1:-all}"
 
+# -o filterwarnings treats module as a REGEX (pytest CLI -W would escape
+# it to a literal full-module match and miss submodules).
+DEPRECATION_GATE=(-o 'filterwarnings=error::DeprecationWarning:repro(\..*)?')
+
 if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
-    echo "=== stage 1: tier-1 (fast) ==="
-    python -m pytest -x -q
+    echo "=== stage 1: tier-1 (fast) + repro.* deprecation gate ==="
+    python -m pytest -x -q "${DEPRECATION_GATE[@]}"
 fi
 
 if [[ "$stage" == "slow" || "$stage" == "all" ]]; then
     echo "=== stage 2: slow tier ==="
-    python -m pytest -q -m slow
+    python -m pytest -q -m slow "${DEPRECATION_GATE[@]}"
 fi

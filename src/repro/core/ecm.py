@@ -26,14 +26,26 @@ Two model families live here:
    that would be needed to saturate the chip's HBM — the quantity that
    decides whether "Kahan comes for free" (n_s_equiv == that of naive).
 
-All cycle math is plain Python floats — this module never touches jax.
+The kernel descriptions (instruction mixes) are NOT a parallel hardcoded
+list: they derive from the compensation-scheme registry
+(``repro.kernels.schemes``) via ``dot_kernel_for_scheme`` /
+``tpu_block_for_scheme``. The registry owns adds/muls per scalar
+iteration; this module only adds the machine axis (SIMD width, element
+bytes, VMEM-block size). Registering a new scheme makes it predictable
+here (``registry_dot_kernels`` / ``registry_tpu_blocks`` /
+``ecm_tpu_for_scheme``) with no edits to this file. The named module
+constants (``KAHAN_AVX_SP``, ``DOT2_TPU``, ...) are built lazily (PEP
+562) from the same derivation, so importing this module stays light.
+
+All cycle math is plain Python floats — jax is only reached through the
+lazy registry import, and only for metadata (no arrays).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 
 # ===========================================================================
@@ -86,12 +98,9 @@ class DotKernel:
     simd: str            # 'scalar' | 'sse' | 'avx'
 
 
-NAIVE_SP = DotKernel("naive", adds=1, muls=1, loads=2, flops=2, elem_bytes=4, simd="avx")
-KAHAN_SCALAR_SP = DotKernel("kahan-scalar", 4, 1, 2, 2, 4, "scalar")
-KAHAN_SSE_SP = DotKernel("kahan-sse", 4, 1, 2, 2, 4, "sse")
-KAHAN_AVX_SP = DotKernel("kahan-avx", 4, 1, 2, 2, 4, "avx")
-KAHAN_SCALAR_DP = DotKernel("kahan-scalar-dp", 4, 1, 2, 2, 8, "scalar")
-KAHAN_AVX_DP = DotKernel("kahan-avx-dp", 4, 1, 2, 2, 8, "avx")
+# The named kernels (NAIVE_SP, KAHAN_AVX_SP, ... ) are derived from the
+# compensation-scheme registry — see ``dot_kernel_for_scheme`` and the
+# module ``__getattr__`` at the bottom of this file.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,10 +259,8 @@ def tpu_dot_block(name: str, elems: int, flops_per_elem: int,
                           sequential)
 
 
-KAHAN_DOT_TPU = tpu_dot_block("kahan-dot", 8 * 1024, 5)
-NAIVE_DOT_TPU = tpu_dot_block("naive-dot", 8 * 1024, 2)
-KAHAN_DOT_SEQ_TPU = tpu_dot_block("kahan-dot-seq", 8 * 1024, 5, sequential=True)
-DOT2_TPU = tpu_dot_block("dot2", 8 * 1024, 17)
+# KAHAN_DOT_TPU / NAIVE_DOT_TPU / KAHAN_DOT_SEQ_TPU / DOT2_TPU are
+# registry-derived — see ``tpu_block_for_scheme`` and ``__getattr__``.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -355,3 +362,109 @@ class RooflineTerms:
         """Fraction of peak: useful-FLOPs-time / predicted step time."""
         ideal = model_flops / (self.chips * self.machine.mxu_bf16_tflops * 1e12)
         return ideal / self.step_time_s if self.step_time_s > 0 else 0.0
+
+
+# ===========================================================================
+# Part 4: compensation-scheme registry bridge
+# ===========================================================================
+#
+# The variant axis (naive / kahan / pairwise / dot2 / custom) is owned by
+# ``repro.kernels.schemes``; this section turns a registered scheme's
+# instruction mix into the model's kernel descriptions. The import is
+# lazy and metadata-only (no jax arrays are created).
+
+def _scheme(spec) -> "object":
+    from repro.kernels import schemes as _schemes
+
+    if isinstance(spec, str):
+        return _schemes.get(spec)  # fail-fast: lists the registered menu
+    return spec
+
+
+def dot_kernel_for_scheme(scheme: Union[str, object], *, simd: str = "avx",
+                          elem_bytes: int = 4,
+                          name: Optional[str] = None) -> DotKernel:
+    """x86 kernel description for a registered scheme: the registry owns
+    the adds/muls per scalar iteration, the caller picks the SIMD variant
+    and element width (the machine axis the registry doesn't model)."""
+    sch = _scheme(scheme)
+    mix = sch.instruction_mix
+    return DotKernel(name or sch.name, adds=mix.adds, muls=mix.muls,
+                     loads=2, flops=2, elem_bytes=elem_bytes, simd=simd)
+
+
+def tpu_block_for_scheme(scheme: Union[str, object], *,
+                         elems: int = 8 * 1024, elem_bytes: int = 4,
+                         streams: int = 2, sequential: bool = False,
+                         name: Optional[str] = None) -> TPUKernelBlock:
+    """TPU VMEM-block description for a registered scheme (executed VPU
+    flops per element = the scheme's instruction-mix total)."""
+    sch = _scheme(scheme)
+    return tpu_dot_block(name or sch.name, elems,
+                         sch.instruction_mix.flops, elem_bytes, streams,
+                         sequential)
+
+
+def registry_dot_kernels(*, simd: str = "avx", elem_bytes: int = 4,
+                         ) -> Dict[str, DotKernel]:
+    """One x86 kernel description per *currently registered* scheme —
+    newly registered schemes appear with no edits here."""
+    from repro.kernels import schemes as _schemes
+
+    return {n: dot_kernel_for_scheme(s, simd=simd, elem_bytes=elem_bytes)
+            for n, s in _schemes.registered().items()}
+
+
+def registry_tpu_blocks(*, elems: int = 8 * 1024, elem_bytes: int = 4,
+                        ) -> Dict[str, TPUKernelBlock]:
+    """One TPU block description per *currently registered* scheme."""
+    from repro.kernels import schemes as _schemes
+
+    return {n: tpu_block_for_scheme(s, elems=elems, elem_bytes=elem_bytes)
+            for n, s in _schemes.registered().items()}
+
+
+def ecm_tpu_for_scheme(machine: TPUMachine, scheme: Union[str, object],
+                       **block_kwargs) -> TPUECMResult:
+    """ECM-TPU prediction straight from a scheme name — the one-call path
+    for anything in the registry (including schemes registered at runtime)."""
+    return ecm_tpu(machine, tpu_block_for_scheme(scheme, **block_kwargs))
+
+
+# Named kernel constants, derived lazily (PEP 562 module __getattr__) from
+# the registry so importing repro.core.ecm does not eagerly import the
+# kernels package. Resolved values are cached in module globals.
+_REGISTRY_CONSTANTS = {
+    # paper Table 1/2 x86 variants
+    "NAIVE_SP": lambda: dot_kernel_for_scheme("naive", simd="avx",
+                                              name="naive"),
+    "KAHAN_SCALAR_SP": lambda: dot_kernel_for_scheme(
+        "kahan", simd="scalar", name="kahan-scalar"),
+    "KAHAN_SSE_SP": lambda: dot_kernel_for_scheme("kahan", simd="sse",
+                                                  name="kahan-sse"),
+    "KAHAN_AVX_SP": lambda: dot_kernel_for_scheme("kahan", simd="avx",
+                                                  name="kahan-avx"),
+    "KAHAN_SCALAR_DP": lambda: dot_kernel_for_scheme(
+        "kahan", simd="scalar", elem_bytes=8, name="kahan-scalar-dp"),
+    "KAHAN_AVX_DP": lambda: dot_kernel_for_scheme(
+        "kahan", simd="avx", elem_bytes=8, name="kahan-avx-dp"),
+    # TPU adaptation blocks
+    "KAHAN_DOT_TPU": lambda: tpu_block_for_scheme("kahan",
+                                                  name="kahan-dot"),
+    "NAIVE_DOT_TPU": lambda: tpu_block_for_scheme("naive",
+                                                  name="naive-dot"),
+    "KAHAN_DOT_SEQ_TPU": lambda: tpu_block_for_scheme(
+        "kahan", sequential=True, name="kahan-dot-seq"),
+    "DOT2_TPU": lambda: tpu_block_for_scheme("dot2", name="dot2"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        builder = _REGISTRY_CONSTANTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    value = builder()
+    globals()[name] = value  # cache: derive once per process
+    return value

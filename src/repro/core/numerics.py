@@ -21,23 +21,48 @@ from typing import Tuple
 import numpy as np
 
 
+_SPLIT64 = 134217729.0  # Veltkamp constant for float64: 2**27 + 1
+_FMA = getattr(math, "fma", None)  # Python >= 3.13
+
+
+def _two_prod_err64(x: float, y: float) -> float:
+    """Exact error of the rounded float64 product: x*y - fl(x*y).
+
+    Uses ``math.fma`` when the platform provides it (Python >= 3.13);
+    otherwise the Dekker/Veltkamp split, which is exactly equivalent for
+    finite float64 inputs barring overflow in the split. Either way the
+    returned term is EXACT — the fallback never silently degrades to a
+    zero error term.
+    """
+    p = x * y
+    if _FMA is not None:
+        return _FMA(x, y, -p)
+    xb = _SPLIT64 * x
+    x_hi = xb - (xb - x)
+    x_lo = x - x_hi
+    yb = _SPLIT64 * y
+    y_hi = yb - (yb - y)
+    y_lo = y - y_hi
+    return ((x_hi * y_hi - p) + x_hi * y_lo + x_lo * y_hi) + x_lo * y_lo
+
+
 def exact_dot(a: np.ndarray, b: np.ndarray) -> float:
     """Correctly-rounded (to float64) dot product of fp32/fp64 vectors.
 
     For float32 inputs each product is exact in float64; math.fsum then
-    sums exactly (it maintains full precision internally).
+    sums exactly (it maintains full precision internally). For float64
+    inputs each product is split into its rounded value plus the exact
+    TwoProd error term (``_two_prod_err64``), and fsum adds the 2n exact
+    parts — correctly rounded regardless of the Python version.
     """
     a64 = np.asarray(a, dtype=np.float64)
     b64 = np.asarray(b, dtype=np.float64)
     if a.dtype == np.float32 and b.dtype == np.float32:
         return math.fsum((a64 * b64).tolist())
-    # float64 inputs: products round; use compensated two_prod in python
-    total = 0.0
     parts = []
     for x, y in zip(a64.tolist(), b64.tolist()):
         parts.append(x * y)
-        parts.append(math.fma(x, y, -(x * y)) if hasattr(math, "fma") else 0.0)
-    del total
+        parts.append(_two_prod_err64(x, y))
     return math.fsum(parts)
 
 

@@ -34,9 +34,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core.kahan import compensated_psum_scalar, kahan_step
+from repro.kernels import schemes as _schemes
 from repro.kernels.engine import (
     Accumulator,
     CompensatedReduction,
+    SchemeSpec,
     merge_accumulators,
 )
 
@@ -72,27 +74,36 @@ def _sharded_reduce(axis: str, local_accumulate):
 
 
 def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
-                 mode: str = "kahan", unroll: int = 8,
-                 interpret: Optional[bool] = None) -> jax.Array:
+                 scheme: SchemeSpec = None, unroll: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 mode: Optional[str] = None) -> jax.Array:
     """Compensated sum of an array sharded over one mesh axis.
 
     Per-device: the engine's Pallas sum kernel over the local shard.
     Cross-device: all-gather of the (s, c) grids + the deterministic
     two-sum tree — NOT a psum. Returns a replicated fp32 scalar that is
-    bitwise reproducible for a fixed mesh size.
+    bitwise reproducible for a fixed mesh size. ``scheme`` is any
+    registered compensation scheme / a Policy (None -> ambient policy);
+    ``mode=`` is the deprecated alias.
     """
-    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+    scheme = _schemes.resolve_legacy_mode(mode, scheme)
+    eng = CompensatedReduction(scheme=scheme, unroll=unroll,
+                               interpret=interpret)
     reduce = _sharded_reduce(axis, eng.sum_accumulators)
     return compat.shard_map(reduce, mesh=mesh, in_specs=P(axis),
                             out_specs=P(), check_vma=False)(x)
 
 
 def sharded_dot(mesh: Mesh, a: jax.Array, b: jax.Array, *,
-                axis: str = "data", mode: str = "kahan", unroll: int = 8,
-                interpret: Optional[bool] = None) -> jax.Array:
+                axis: str = "data", scheme: SchemeSpec = None,
+                unroll: Optional[int] = None,
+                interpret: Optional[bool] = None,
+                mode: Optional[str] = None) -> jax.Array:
     """Compensated dot of two identically-sharded 1-D arrays (see
-    ``sharded_asum`` for the merge semantics)."""
-    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+    ``sharded_asum`` for the merge and scheme-resolution semantics)."""
+    scheme = _schemes.resolve_legacy_mode(mode, scheme)
+    eng = CompensatedReduction(scheme=scheme, unroll=unroll,
+                               interpret=interpret)
     reduce = _sharded_reduce(axis, eng.dot_accumulators)
     return compat.shard_map(reduce, mesh=mesh, in_specs=(P(axis), P(axis)),
                             out_specs=P(), check_vma=False)(a, b)

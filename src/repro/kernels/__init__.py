@@ -3,24 +3,36 @@
 The paper's contribution IS a kernel (the Kahan-compensated dot), so this
 package carries the core artifacts:
 
-  kahan_dot.py    — compensated dot (modes: naive / kahan / dot2), the
-                    paper's Fig. 1 kernels with VPU-lane partial
-                    accumulators and the unroll knob.
+  schemes.py      — the compensation-scheme registry (naive / kahan /
+                    pairwise / dot2 + runtime registration) and the
+                    frozen Policy API (``use_policy`` context default).
+                    The variant axis of the whole repo lives here.
+  kahan_dot.py    — compensated dot: ONE parameterized kernel body that
+                    traces ``scheme.mul_update`` from the registry
+                    (the paper's Fig. 1 kernels with VPU-lane partial
+                    accumulators and the unroll knob).
   kahan_sum.py    — single-stream variant (loss/metric accumulation).
-  kahan_matmul.py — MXU matmul with Kahan-compensated inter-K-tile
+  kahan_matmul.py — MXU matmul with scheme-compensated inter-K-tile
                     accumulation (the TPU analog of the paper's
                     FMA-as-ADD trick).
-  flash_attention.py — fused flash attention with Kahan-compensated
+  flash_attention.py — fused flash attention with scheme-compensated
                     online-softmax accumulators (the fix for the dominant
-                    roofline term found in EXPERIMENTS.md §Perf, with the
-                    paper's technique applied to the l/acc running sums).
+                    roofline term found in EXPERIMENTS.md §Perf).
   engine.py       — the unified CompensatedReduction engine: one (s, c)
                     accumulator contract (total = s + c, merge = two-sum
                     tree), one padding/promotion/blocking policy, batched
                     (batch, steps) grids with a custom_vmap rule.
   ops.py          — jit'd public wrappers (interpret on CPU, Mosaic on TPU).
-  ref.py          — pure-jnp oracles with identical rounding sequences.
+  ref.py          — registry-generic pure-jnp oracles tracing the same
+                    scheme callables (bitwise-identical rounding).
 """
 
 from repro.kernels import engine  # noqa: F401
 from repro.kernels import ops  # noqa: F401
+from repro.kernels import schemes  # noqa: F401
+from repro.kernels.schemes import (  # noqa: F401
+    CompensationScheme,
+    Policy,
+    current_policy,
+    use_policy,
+)

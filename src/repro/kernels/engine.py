@@ -8,6 +8,14 @@ One accumulator contract for every compensated reduction in the repo
                               fixed order — deterministic, associativity-
                               free, robust to magnitude inversion)
 
+The *variant axis* (which accumulation scheme runs per block) is owned by
+the ``repro.kernels.schemes`` registry: ``CompensatedReduction`` resolves
+a scheme name / ``CompensationScheme`` / ``Policy`` ONCE at construction
+(unknown names fail fast with the registered menu) and hands the resolved
+scheme object to the kernels as a static argument. The deprecated
+``mode: str`` kwarg still works — it resolves through the same registry
+(bitwise-identical results) and emits a ``DeprecationWarning``.
+
 ``CompensatedReduction`` owns the three policies the kernel wrappers used
 to re-implement independently:
 
@@ -23,9 +31,10 @@ to re-implement independently:
   same tree), cross-device (``repro.distributed.collectives`` gathers
   per-device ``(s, c)`` grids and folds them through this very function).
 
-``interpret=None`` resolution (interpret mode off only on a real TPU
-backend) is hoisted here too — ``resolve_interpret`` is the single
-authority for dot, asum, and matmul.
+Unset knobs (scheme/unroll/blocks/interpret = None) resolve from the
+ambient ``schemes.use_policy`` default. ``interpret=None`` resolution
+(interpret mode off only on a real TPU backend) is hoisted here too —
+``resolve_interpret`` is the single authority for dot, asum, and matmul.
 
 Batched variants (``batched_dot`` / ``batched_asum``) lay a ``[batch, n]``
 problem out as ONE Pallas grid ``(batch, steps)`` instead of a Python loop
@@ -39,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,11 +58,15 @@ from repro.core import kahan as K
 from repro.kernels import kahan_dot as _kd
 from repro.kernels import kahan_matmul as _km
 from repro.kernels import kahan_sum as _ks
+from repro.kernels import schemes as _schemes
+from repro.kernels.schemes import CompensationScheme, Policy
 
 COMPUTE_DTYPE = jnp.float32
 
 LANES = _kd.LANES
 SUBLANES = _kd.SUBLANES
+
+SchemeSpec = Union[str, CompensationScheme, Policy, None]
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
@@ -137,14 +150,43 @@ class CompensatedReduction:
     """Shared padding / promotion / blocking / merge policy for the
     compensated reductions.
 
-    mode      dot: naive | kahan | dot2; asum/matmul: naive | kahan
+    scheme    registered scheme name, CompensationScheme, or a Policy
+              (None -> the ambient ``schemes.use_policy`` default)
     unroll    accumulator-group count U; kernel block is (8*U, 128)
+              (None -> policy)
     interpret None -> ``resolve_interpret`` (Mosaic only on TPU)
+    blocks    matmul (block_m, block_n, block_k) defaults (None -> policy)
+    mode      DEPRECATED alias for ``scheme`` (registry-resolved, warns)
+
+    Unknown scheme names raise ``ValueError`` (listing the registered
+    menu) here — at construction — never inside a kernel trace.
     """
 
-    mode: str = "kahan"
-    unroll: int = 8
+    scheme: SchemeSpec = None
+    unroll: Optional[int] = None
     interpret: Optional[bool] = None
+    blocks: Optional[Tuple[int, int, int]] = None
+    mode: dataclasses.InitVar[Optional[str]] = None
+
+    def __post_init__(self, mode: Optional[str]):
+        # stacklevel 4 attributes the warning to the frame calling
+        # CompensatedReduction(...): helper(1) <- __post_init__(2) <-
+        # dataclass __init__(3) <- caller(4).
+        spec = _schemes.resolve_legacy_mode(mode, self.scheme, stacklevel=4)
+        if isinstance(spec, Policy):
+            pol = spec
+            spec = pol.scheme
+        else:
+            pol = _schemes.current_policy()
+            if spec is None:
+                spec = pol.scheme
+        object.__setattr__(self, "scheme", _schemes.resolve_scheme(spec))
+        if self.unroll is None:
+            object.__setattr__(self, "unroll", pol.unroll)
+        if self.interpret is None:
+            object.__setattr__(self, "interpret", pol.interpret)
+        if self.blocks is None:
+            object.__setattr__(self, "blocks", pol.blocks)
 
     @property
     def block(self) -> int:
@@ -185,13 +227,15 @@ class CompensatedReduction:
             raise ValueError(
                 f"dot operands must have equal size: {a.shape} vs {b.shape}")
         a, b = self._prep1d(a), self._prep1d(b)
-        s, c = _kd.dot_accumulators(a, b, mode=self.mode, unroll=self.unroll,
+        s, c = _kd.dot_accumulators(a, b, scheme=self.scheme,
+                                    unroll=self.unroll,
                                     interpret=self._interpret())
         return Accumulator(s, c)
 
     def sum_accumulators(self, x: jax.Array) -> Accumulator:
         x = self._prep1d(x)
-        s, c = _ks.sum_accumulators(x, mode=self.mode, unroll=self.unroll,
+        s, c = _ks.sum_accumulators(x, scheme=self.scheme,
+                                    unroll=self.unroll,
                                     interpret=self._interpret())
         return Accumulator(s, c)
 
@@ -202,14 +246,14 @@ class CompensatedReduction:
                 f"batched_dot operands must match: {a.shape} vs {b.shape}")
         a, b = self._prep2d(a), self._prep2d(b)
         s, c = _kd.dot_accumulators_batched(
-            a, b, mode=self.mode, unroll=self.unroll,
+            a, b, scheme=self.scheme, unroll=self.unroll,
             interpret=self._interpret())
         return Accumulator(s, c)
 
     def batched_sum_accumulators(self, x: jax.Array) -> Accumulator:
         x = self._prep2d(x)
         s, c = _ks.sum_accumulators_batched(
-            x, mode=self.mode, unroll=self.unroll,
+            x, scheme=self.scheme, unroll=self.unroll,
             interpret=self._interpret())
         return Accumulator(s, c)
 
@@ -217,12 +261,12 @@ class CompensatedReduction:
     def dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """Compensated dot of two arrays (raveled). fp32 scalar.
         ``jax.vmap`` dispatches to the batched grid (custom_vmap rule)."""
-        return _vmappable_dot(self.mode, self.unroll, self.interpret)(a, b)
+        return _vmappable_dot(self.scheme, self.unroll, self.interpret)(a, b)
 
     def asum(self, x: jax.Array) -> jax.Array:
         """Compensated sum of an array (raveled). fp32 scalar.
         ``jax.vmap`` dispatches to the batched grid (custom_vmap rule)."""
-        return _vmappable_asum(self.mode, self.unroll, self.interpret)(x)
+        return _vmappable_asum(self.scheme, self.unroll, self.interpret)(x)
 
     def batched_dot(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """[batch, n] x [batch, n] -> [batch] fp32, one Pallas grid
@@ -235,14 +279,20 @@ class CompensatedReduction:
         return self.batched_sum_accumulators(x).total()
 
     # -- matmul --------------------------------------------------------------
-    def matmul(self, a: jax.Array, b: jax.Array, *, block_m: int = 256,
-               block_n: int = 256, block_k: int = 512) -> jax.Array:
+    def matmul(self, a: jax.Array, b: jax.Array, *,
+               block_m: Optional[int] = None, block_n: Optional[int] = None,
+               block_k: Optional[int] = None) -> jax.Array:
         """C = A @ B, compensated inter-K-tile accumulation, fp32 output.
 
         Same promotion policy (inputs widened to COMPUTE_DTYPE before
         padding); the (s, c) pair lives per output tile inside the kernel
         and collapses to ``s + c`` on the last K step (same contract).
+        Unset block sizes come from the resolved policy's ``blocks``.
         """
+        bm, bn, bk = self.blocks
+        block_m = bm if block_m is None else block_m
+        block_n = bn if block_n is None else block_n
+        block_k = bk if block_k is None else block_k
         m, k = a.shape
         k2, n = b.shape
         assert k == k2, f"contraction mismatch {k} vs {k2}"
@@ -257,7 +307,7 @@ class CompensatedReduction:
         if pk or pn:
             b = jnp.pad(b, ((0, pk), (0, pn)))
         out = _km.matmul(a, b, block_m=block_m, block_n=block_n,
-                         block_k=block_k, mode=self.mode,
+                         block_k=block_k, scheme=self.scheme,
                          interpret=self._interpret())
         return out[:m, :n]
 
@@ -277,8 +327,10 @@ def _flatten_batch(x: jax.Array, axis_size: int) -> jax.Array:
 
 
 @functools.lru_cache(maxsize=None)
-def _vmappable_dot(mode: str, unroll: int, interpret: Optional[bool]):
-    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+def _vmappable_dot(scheme: CompensationScheme, unroll: int,
+                   interpret: Optional[bool]):
+    eng = CompensatedReduction(scheme=scheme, unroll=unroll,
+                               interpret=interpret)
 
     @jax.custom_batching.custom_vmap
     def _dot(a, b):
@@ -299,8 +351,10 @@ def _vmappable_dot(mode: str, unroll: int, interpret: Optional[bool]):
 
 
 @functools.lru_cache(maxsize=None)
-def _vmappable_asum(mode: str, unroll: int, interpret: Optional[bool]):
-    eng = CompensatedReduction(mode=mode, unroll=unroll, interpret=interpret)
+def _vmappable_asum(scheme: CompensationScheme, unroll: int,
+                    interpret: Optional[bool]):
+    eng = CompensatedReduction(scheme=scheme, unroll=unroll,
+                               interpret=interpret)
 
     @jax.custom_batching.custom_vmap
     def _asum(x):

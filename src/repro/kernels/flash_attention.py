@@ -1,4 +1,4 @@
-"""Pallas TPU flash-attention with Kahan-compensated online softmax.
+"""Pallas TPU flash-attention with compensated online softmax.
 
 Motivation (EXPERIMENTS.md §Perf): the dominant residual roofline term in
 every train/prefill cell is the materialized fp32 score/softmax buffer
@@ -14,11 +14,11 @@ Flash attention folds k-blocks into running statistics
 
 ``l`` and ``acc`` are *long sequential accumulations* (one add per
 k-block: 4096 blocks at 512k context) — exactly the error pattern the
-paper compensates in the scalar product. ``mode="kahan"`` carries (value,
-comp) pairs for both and applies the compensated update per block; the
-rescaling by exp(m_old - m) scales value AND comp (scaling commutes with
-compensation up to one rounding). ``mode="naive"`` is the standard
-kernel.
+paper compensates in the scalar product. Both carry the engine's (value,
+comp) pair and fold each k-block through ``scheme.update`` from the
+compensation-scheme registry (naive / kahan / pairwise / dot2 / custom —
+same menu as the dot kernels); the rescaling by exp(m_old - m) scales
+value AND comp (scaling commutes with compensation up to one rounding).
 
 Layout: inputs [BH, S, dh] (batch*heads flattened by the wrapper); grid
 (BH, q_blocks, k_blocks), k innermost ("arbitrary"); per-(bh, q-block)
@@ -32,18 +32,23 @@ would prune the grid).
 from __future__ import annotations
 
 import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import schemes as _schemes
+from repro.kernels.schemes import CompensationScheme
+
 NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, lc_scr,
-                  acc_scr, accc_scr, *, mode: str, causal: bool,
-                  block_q: int, block_k: int, k_steps: int, scale: float):
+                  acc_scr, accc_scr, *, scheme: CompensationScheme,
+                  causal: bool, block_q: int, block_k: int, k_steps: int,
+                  scale: float):
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -76,44 +81,30 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, lc_scr,
     pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
 
-    if mode == "kahan":
-        # compensated l += p_sum (after rescale of value AND comp)
-        l_s = l_scr[...] * corr
-        l_c = lc_scr[...] * corr
-        y = p_sum + l_c
-        t = l_s + y
-        lc_scr[...] = y - (t - l_s)
-        l_scr[...] = t
-        a_s = acc_scr[...] * corr
-        a_c = accc_scr[...] * corr
-        ya = pv + a_c
-        ta = a_s + ya
-        accc_scr[...] = ya - (ta - a_s)
-        acc_scr[...] = ta
-    else:
-        l_scr[...] = l_scr[...] * corr + p_sum
-        acc_scr[...] = acc_scr[...] * corr + pv
+    # rescale value AND comp, then fold this k-block's contribution
+    # through the scheme's accumulator update.
+    l_s, l_c = scheme.update(l_scr[...] * corr, lc_scr[...] * corr,
+                             p_sum, kb)
+    l_scr[...] = l_s
+    lc_scr[...] = l_c
+    a_s, a_c = scheme.update(acc_scr[...] * corr, accc_scr[...] * corr,
+                             pv, kb)
+    acc_scr[...] = a_s
+    accc_scr[...] = a_c
     m_scr[...] = m_new
 
     @pl.when(kb == k_steps - 1)
     def _emit():
-        l_tot = l_scr[...] + (lc_scr[...] if mode == "kahan" else 0.0)
-        acc_tot = acc_scr[...] + (accc_scr[...] if mode == "kahan" else 0.0)
+        l_tot = scheme.finalize(l_scr[...], lc_scr[...])
+        acc_tot = scheme.finalize(acc_scr[...], accc_scr[...])
         o_ref[0] = (acc_tot / jnp.maximum(l_tot, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_k", "mode", "causal", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    block_q: int = 256, block_k: int = 256,
-                    mode: str = "kahan", causal: bool = True,
-                    interpret: bool = True) -> jax.Array:
-    """q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. Returns [BH, Sq, dh] fp32.
-
-    Caller pads Sq/Skv to block multiples (zero-pad keys are masked by the
-    causal test when causal=True; for non-causal use exact multiples).
-    """
+    static_argnames=("block_q", "block_k", "scheme", "causal", "interpret"))
+def _flash_attention_impl(q, k, v, *, block_q, block_k,
+                          scheme: CompensationScheme, causal, interpret):
     bh, sq, dh = q.shape
     _, skv, _ = k.shape
     assert sq % block_q == 0 and skv % block_k == 0
@@ -121,7 +112,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     scale = dh ** -0.5
 
     kernel = functools.partial(
-        _flash_kernel, mode=mode, causal=causal, block_q=block_q,
+        _flash_kernel, scheme=scheme, causal=causal, block_q=block_q,
         block_k=block_k, k_steps=grid[2], scale=scale)
     return pl.pallas_call(
         kernel,
@@ -142,3 +133,23 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 256, block_k: int = 256,
+                    scheme: Union[str, CompensationScheme, None] = None,
+                    causal: bool = True, interpret: bool = True,
+                    mode: Optional[str] = None) -> jax.Array:
+    """q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. Returns [BH, Sq, dh] fp32.
+
+    ``scheme``: registered scheme name / CompensationScheme / None (None
+    resolves the ambient ``use_policy`` default). ``mode=`` is the
+    deprecated alias. Caller pads Sq/Skv to block multiples (zero-pad
+    keys are masked by the causal test when causal=True; for non-causal
+    use exact multiples).
+    """
+    scheme = _schemes.resolve_legacy_mode(mode, scheme)
+    scheme = _schemes.resolve_scheme(scheme)
+    return _flash_attention_impl(q, k, v, block_q=block_q, block_k=block_k,
+                                 scheme=scheme, causal=causal,
+                                 interpret=interpret)

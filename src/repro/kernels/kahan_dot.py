@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the (Kahan-)compensated dot product — paper Fig. 1b.
+"""Pallas TPU kernel for the compensated dot product — paper Fig. 1b.
 
 TPU adaptation of the paper's SIMD kernels (DESIGN.md §2):
 
@@ -10,19 +10,15 @@ TPU adaptation of the paper's SIMD kernels (DESIGN.md §2):
 * One *unit of work* = one VMEM block (the cache-line analog). HBM→VMEM
   transfers are double-buffered by the Pallas pipeline — the ECM overlap
   inversion described in DESIGN.md §7.
-* The compensated update is the paper's exact 4-add sequence; the final
-  cross-lane merge uses two-sum (robust to magnitude inversion), mirroring
-  the horizontal reduction after the paper's main loop.
+* The accumulation step is NOT hardcoded: the kernel body is one
+  parameterized loop that calls ``scheme.mul_update`` from the
+  compensation-scheme registry (``repro.kernels.schemes``) — naive,
+  kahan, pairwise, dot2, and any scheme registered later, with no kernel
+  edits. The final cross-lane merge uses the engine's two-sum tree.
 
-Modes:
-  naive — ``s += a*b``              (paper Fig. 1a, 2 flops/elem)
-  kahan — Fig. 1b                   (5 flops/elem)
-  dot2  — two_prod + two_sum        (Ogita et al., ~17 flops/elem; accuracy
-                                     ceiling used in the benchmark tables)
-
-The kernel returns the full (s, c) accumulator grids; the jit'd wrapper in
-``ops.py`` performs the deterministic compensated merge (cheap: one
-(8*U, 128) tree fold per *array*, not per block).
+The kernel returns the full (s, c) accumulator grids; the engine performs
+the deterministic compensated merge (cheap: one (8*U, 128) tree fold per
+*array*, not per block).
 """
 
 from __future__ import annotations
@@ -35,38 +31,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.schemes import CompensationScheme
+
 LANES = 128
 SUBLANES = 8
 
 
-def _kahan_update(s, c, prod):
-    """The paper's compensated accumulation (4 adds; ``total = s + c``
-    convention — see core.kahan.kahan_step)."""
-    y = prod + c
-    t = s + y
-    c_new = y - (t - s)
-    return t, c_new
-
-
-def _dot2_update(s, c, x, y):
-    """two_prod + two_sum compensated update (fp32 Veltkamp split)."""
-    split = jnp.float32(4097.0)  # 2^12 + 1
-    p = x * y
-    xb = split * x
-    x_hi = xb - (xb - x)
-    x_lo = x - x_hi
-    yb = split * y
-    y_hi = yb - (yb - y)
-    y_lo = y - y_hi
-    ep = ((x_hi * y_hi - p) + x_hi * y_lo + x_lo * y_hi) + x_lo * y_lo
-    t = s + p
-    bp = t - s
-    es = (s - (t - bp)) + (p - bp)
-    return t, c + (ep + es)
-
-
-def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
-                grid_steps: int, step_dim: int = 0):
+def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *,
+                scheme: CompensationScheme, grid_steps: int,
+                step_dim: int = 0):
     """Shared body for the single grid (steps,) and the batched grid
     (batch, steps). Batched block refs carry a leading length-1 batch dim;
     the reshape to the scratch shape strips/restores it. ``step_dim``
@@ -80,16 +53,7 @@ def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
 
     a = a_ref[...].reshape(s_acc.shape).astype(jnp.float32)
     b = b_ref[...].reshape(s_acc.shape).astype(jnp.float32)
-    s = s_acc[...]
-    c = c_acc[...]
-    if mode == "naive":
-        s = s + a * b
-    elif mode == "kahan":
-        s, c = _kahan_update(s, c, a * b)
-    elif mode == "dot2":
-        s, c = _dot2_update(s, c, a, b)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    s, c = scheme.mul_update(s_acc[...], c_acc[...], a, b, g)
     s_acc[...] = s
     c_acc[...] = c
 
@@ -99,14 +63,15 @@ def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
         c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
-def dot_accumulators(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
-                     unroll: int = 8,
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+def dot_accumulators(a: jax.Array, b: jax.Array, *,
+                     scheme: CompensationScheme, unroll: int = 8,
                      interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Run the blocked dot kernel; returns (s, c) accumulator grids.
 
     ``a``/``b`` must already be 1-D of equal length, padded by the caller to
-    a multiple of ``8 * unroll * 128``.
+    a multiple of ``8 * unroll * 128``. ``scheme`` is a (hashable, static)
+    ``CompensationScheme`` — callers resolve names through the registry.
     """
     rows = SUBLANES * unroll
     n = a.shape[0]
@@ -115,7 +80,7 @@ def dot_accumulators(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
     a2 = a.reshape(steps * rows, LANES)
     b2 = b.reshape(steps * rows, LANES)
 
-    kernel = functools.partial(_dot_kernel, mode=mode, grid_steps=steps)
+    kernel = functools.partial(_dot_kernel, scheme=scheme, grid_steps=steps)
     s, c = pl.pallas_call(
         kernel,
         grid=(steps,),
@@ -140,9 +105,9 @@ def dot_accumulators(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
     return s, c
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
 def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
-                             mode: str = "kahan", unroll: int = 8,
+                             scheme: CompensationScheme, unroll: int = 8,
                              interpret: bool = True,
                              ) -> Tuple[jax.Array, jax.Array]:
     """Batched dot kernel: one (batch, steps) Pallas grid.
@@ -162,7 +127,7 @@ def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
     a3 = a.reshape(batch, steps * rows, LANES)
     b3 = b.reshape(batch, steps * rows, LANES)
 
-    kernel = functools.partial(_dot_kernel, mode=mode, grid_steps=steps,
+    kernel = functools.partial(_dot_kernel, scheme=scheme, grid_steps=steps,
                                step_dim=1)
     s, c = pl.pallas_call(
         kernel,

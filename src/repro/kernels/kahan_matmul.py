@@ -1,11 +1,11 @@
-"""Pallas TPU kernel: matmul with Kahan-compensated inter-tile accumulation.
+"""Pallas TPU kernel: matmul with compensated inter-tile accumulation.
 
 This is the TPU analog of the paper's "FMA with unit multiplicand" trick
 (§4): the MXU performs the per-tile multiply-(fp32-)accumulate — error-free
 enough *within* a (bm, bk)x(bk, bn) tile thanks to fp32 accumulation — and
-the VPU applies the paper's compensated update when folding successive
-K-tiles into the output accumulator. The long K-dimension reduction is where
-fp32 accumulation error grows with K; Kahan compensation bounds it
+the VPU applies the registered scheme's update when folding successive
+K-tiles into the output accumulator. The long K-dimension reduction is
+where fp32 accumulation error grows with K; compensation bounds it
 independent of K (O(eps) instead of O(K*eps)).
 
 Use case in the framework: long-context attention score@V contractions and
@@ -14,7 +14,10 @@ tiles; ``kahan_matmul`` is the drop-in used by the compensated serving path.
 
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics — sequential),
 M/N parallel. Accumulators (s, c) live in VMEM scratch, one pair per
-(bm, bn) output tile; they are re-initialized whenever k == 0.
+(bm, bn) output tile; they are re-initialized whenever k == 0. The
+per-K-tile fold is ``scheme.update`` from the compensation-scheme
+registry (any registered scheme works; the tile *product* is always the
+MXU's fp32 dot, so ``mul_update`` does not apply here).
 
 Engine contract: padding, fp32 promotion, and block clamping live in
 ``repro.kernels.engine.CompensatedReduction.matmul`` — callers go through
@@ -33,11 +36,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.kahan_dot import _kahan_update
+from repro.kernels.schemes import CompensationScheme
 
 
-def _matmul_kernel(a_ref, b_ref, out_ref, s_acc, c_acc, *, mode: str,
-                   k_steps: int):
+def _matmul_kernel(a_ref, b_ref, out_ref, s_acc, c_acc, *,
+                   scheme: CompensationScheme, k_steps: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -48,30 +51,25 @@ def _matmul_kernel(a_ref, b_ref, out_ref, s_acc, c_acc, *, mode: str,
     prod = jnp.dot(a_ref[...].astype(jnp.float32),
                    b_ref[...].astype(jnp.float32),
                    preferred_element_type=jnp.float32)
-    if mode == "naive":
-        s_acc[...] = s_acc[...] + prod
-    elif mode == "kahan":
-        s, c = _kahan_update(s_acc[...], c_acc[...], prod)
-        s_acc[...] = s
-        c_acc[...] = c
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    s, c = scheme.update(s_acc[...], c_acc[...], prod, k)
+    s_acc[...] = s
+    c_acc[...] = c
 
     @pl.when(k == k_steps - 1)
     def _emit():
-        out_ref[...] = s_acc[...] + c_acc[...]
+        out_ref[...] = scheme.finalize(s_acc[...], c_acc[...])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "mode", "interpret"))
-def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
-           block_n: int = 256, block_k: int = 512, mode: str = "kahan",
+    static_argnames=("block_m", "block_n", "block_k", "scheme", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, scheme: CompensationScheme,
+           block_m: int = 256, block_n: int = 256, block_k: int = 512,
            interpret: bool = True) -> jax.Array:
     """C = A @ B with compensated inter-tile accumulation. fp32 output.
 
     Caller must pad M, N, K to multiples of the block sizes (zero padding
-    is exact for both modes).
+    is exact for every scheme) and pass a resolved ``CompensationScheme``.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -79,7 +77,8 @@ def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     grid = (m // block_m, n // block_n, k // block_k)
 
-    kernel = functools.partial(_matmul_kernel, mode=mode, k_steps=grid[2])
+    kernel = functools.partial(_matmul_kernel, scheme=scheme,
+                               k_steps=grid[2])
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,8 +1,11 @@
 """Pallas TPU kernel for compensated array summation (single-stream dot).
 
-Same accumulator structure as ``kahan_dot`` with one input stream; used for
-loss/metric accumulation and as the building block of the compensated
-cross-entropy. See kahan_dot.py for the design notes.
+Same accumulator structure as ``kahan_dot`` with one input stream; the
+accumulation step is ``scheme.update`` from the compensation-scheme
+registry, so every registered scheme (naive / kahan / pairwise / dot2 /
+custom) works here with no kernel edits. Used for loss/metric
+accumulation and as the building block of the compensated cross-entropy.
+See kahan_dot.py for the design notes.
 """
 
 from __future__ import annotations
@@ -15,11 +18,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.kahan_dot import LANES, SUBLANES, _kahan_update
+from repro.kernels.kahan_dot import LANES, SUBLANES
+from repro.kernels.schemes import CompensationScheme
 
 
-def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
-                grid_steps: int, step_dim: int = 0):
+def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *,
+                scheme: CompensationScheme, grid_steps: int,
+                step_dim: int = 0):
     """Shared body for the single (steps,) and batched (batch, steps)
     grids — see ``kahan_dot._dot_kernel`` for the reshape convention."""
     g = pl.program_id(step_dim)
@@ -30,14 +35,7 @@ def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
         c_acc[...] = jnp.zeros_like(c_acc)
 
     x = x_ref[...].reshape(s_acc.shape).astype(jnp.float32)
-    s = s_acc[...]
-    c = c_acc[...]
-    if mode == "naive":
-        s = s + x
-    elif mode == "kahan":
-        s, c = _kahan_update(s, c, x)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    s, c = scheme.update(s_acc[...], c_acc[...], x, g)
     s_acc[...] = s
     c_acc[...] = c
 
@@ -47,8 +45,9 @@ def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *, mode: str,
         c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
-def sum_accumulators(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+def sum_accumulators(x: jax.Array, *, scheme: CompensationScheme,
+                     unroll: int = 8,
                      interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Run the blocked sum kernel; returns (s, c) accumulator grids."""
     rows = SUBLANES * unroll
@@ -57,7 +56,7 @@ def sum_accumulators(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
     steps = n // (rows * LANES)
     x2 = x.reshape(steps * rows, LANES)
 
-    kernel = functools.partial(_sum_kernel, mode=mode, grid_steps=steps)
+    kernel = functools.partial(_sum_kernel, scheme=scheme, grid_steps=steps)
     s, c = pl.pallas_call(
         kernel,
         grid=(steps,),
@@ -79,8 +78,8 @@ def sum_accumulators(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
     return s, c
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "unroll", "interpret"))
-def sum_accumulators_batched(x: jax.Array, *, mode: str = "kahan",
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+def sum_accumulators_batched(x: jax.Array, *, scheme: CompensationScheme,
                              unroll: int = 8, interpret: bool = True,
                              ) -> Tuple[jax.Array, jax.Array]:
     """Batched sum kernel: one (batch, steps) Pallas grid.
@@ -96,7 +95,7 @@ def sum_accumulators_batched(x: jax.Array, *, mode: str = "kahan",
     steps = n // (rows * LANES)
     x3 = x.reshape(batch, steps * rows, LANES)
 
-    kernel = functools.partial(_sum_kernel, mode=mode, grid_steps=steps,
+    kernel = functools.partial(_sum_kernel, scheme=scheme, grid_steps=steps,
                                step_dim=1)
     s, c = pl.pallas_call(
         kernel,

@@ -1,5 +1,27 @@
 """Public wrappers for the Pallas kernels — thin veneer over the engine.
 
+Variant selection goes through the compensation-scheme registry
+(``repro.kernels.schemes``): every function takes
+
+    scheme     a registered name ("naive" | "kahan" | "pairwise" |
+               "dot2" | anything registered later), a
+               ``CompensationScheme`` object, or a ``Policy``;
+               None resolves the ambient ``schemes.use_policy`` default
+    unroll     accumulator-group count (None -> policy)
+    interpret  None -> Mosaic only on a real TPU backend
+    mode       DEPRECATED alias for ``scheme`` — resolves through the
+               same registry, returns bitwise-identical results, and
+               emits a DeprecationWarning
+
+Migration note: ``ops.dot(a, b, mode="kahan", unroll=4)`` becomes
+``ops.dot(a, b, scheme="kahan", unroll=4)``, or set the policy once::
+
+    with schemes.use_policy(scheme="kahan", unroll=4):
+        ops.dot(a, b)
+
+Unknown scheme names raise ``ValueError`` (listing the registered menu)
+at the call boundary, before any kernel traces.
+
 All padding, dtype promotion (inputs widen to fp32 once, before padding),
 blocking, interpret-mode resolution, and accumulator merging live in
 ``repro.kernels.engine.CompensatedReduction``; these functions only give
@@ -21,51 +43,68 @@ loop.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
 from repro.kernels import ref as _ref
-from repro.kernels.engine import CompensatedReduction
+from repro.kernels import schemes as _schemes
+from repro.kernels.engine import CompensatedReduction, SchemeSpec
 
 
-def dot(a: jax.Array, b: jax.Array, *, mode: str = "kahan", unroll: int = 8,
-        interpret: bool | None = None) -> jax.Array:
+def _engine(scheme: SchemeSpec, unroll: Optional[int],
+            interpret: Optional[bool],
+            mode: Optional[str]) -> CompensatedReduction:
+    """Shared resolution: deprecated mode= folds into scheme (warning
+    attributed to the ops.* caller), then the engine resolves policy
+    defaults and fails fast on unknown names."""
+    scheme = _schemes.resolve_legacy_mode(mode, scheme, stacklevel=4)
+    return CompensatedReduction(scheme=scheme, unroll=unroll,
+                                interpret=interpret)
+
+
+def dot(a: jax.Array, b: jax.Array, *, scheme: SchemeSpec = None,
+        unroll: Optional[int] = None, interpret: Optional[bool] = None,
+        mode: Optional[str] = None) -> jax.Array:
     """Compensated dot product of two arrays (raveled; fp32 compute and
     result). vmap-aware: batching lands on the (batch, steps) grid."""
-    return CompensatedReduction(mode=mode, unroll=unroll,
-                                interpret=interpret).dot(a, b)
+    return _engine(scheme, unroll, interpret, mode).dot(a, b)
 
 
-def asum(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
-         interpret: bool | None = None) -> jax.Array:
+def asum(x: jax.Array, *, scheme: SchemeSpec = None,
+         unroll: Optional[int] = None, interpret: Optional[bool] = None,
+         mode: Optional[str] = None) -> jax.Array:
     """Compensated sum of an array (raveled; fp32 compute and result).
     vmap-aware: batching lands on the (batch, steps) grid."""
-    return CompensatedReduction(mode=mode, unroll=unroll,
-                                interpret=interpret).asum(x)
+    return _engine(scheme, unroll, interpret, mode).asum(x)
 
 
-def batched_dot(a: jax.Array, b: jax.Array, *, mode: str = "kahan",
-                unroll: int = 8, interpret: bool | None = None) -> jax.Array:
+def batched_dot(a: jax.Array, b: jax.Array, *, scheme: SchemeSpec = None,
+                unroll: Optional[int] = None,
+                interpret: Optional[bool] = None,
+                mode: Optional[str] = None) -> jax.Array:
     """[batch, n] x [batch, n] -> [batch] compensated dots as ONE Pallas
     grid (batch, steps) — bitwise-equal to a loop of ``dot`` calls."""
-    return CompensatedReduction(mode=mode, unroll=unroll,
-                                interpret=interpret).batched_dot(a, b)
+    return _engine(scheme, unroll, interpret, mode).batched_dot(a, b)
 
 
-def batched_asum(x: jax.Array, *, mode: str = "kahan", unroll: int = 8,
-                 interpret: bool | None = None) -> jax.Array:
+def batched_asum(x: jax.Array, *, scheme: SchemeSpec = None,
+                 unroll: Optional[int] = None,
+                 interpret: Optional[bool] = None,
+                 mode: Optional[str] = None) -> jax.Array:
     """[batch, n] -> [batch] compensated sums as ONE Pallas grid
     (batch, steps) — bitwise-equal to a loop of ``asum`` calls."""
-    return CompensatedReduction(mode=mode, unroll=unroll,
-                                interpret=interpret).batched_asum(x)
+    return _engine(scheme, unroll, interpret, mode).batched_asum(x)
 
 
-def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
-           block_n: int = 256, block_k: int = 512, mode: str = "kahan",
-           interpret: bool | None = None) -> jax.Array:
+def matmul(a: jax.Array, b: jax.Array, *, block_m: Optional[int] = None,
+           block_n: Optional[int] = None, block_k: Optional[int] = None,
+           scheme: SchemeSpec = None, interpret: Optional[bool] = None,
+           mode: Optional[str] = None) -> jax.Array:
     """C = A @ B with compensated inter-K-tile accumulation (fp32 compute
-    and result). Pads M/N/K to block multiples and slices back."""
-    return CompensatedReduction(mode=mode, interpret=interpret).matmul(
+    and result). Pads M/N/K to block multiples and slices back; unset
+    block sizes come from the resolved policy's ``blocks``."""
+    return _engine(scheme, None, interpret, mode).matmul(
         a, b, block_m=block_m, block_n=block_n, block_k=block_k)
 
 

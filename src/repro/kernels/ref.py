@@ -1,23 +1,32 @@
-"""Pure-jnp oracles for the Pallas kernels.
+"""Pure-jnp oracles for the Pallas kernels — registry-generic.
 
-Each function mirrors the *exact accumulation semantics* of its kernel so
+Each oracle mirrors the *exact accumulation semantics* of its kernel so
 that interpret-mode kernel output can be compared with tight tolerances
-(ideally bitwise for the compensated variants, since both execute the same
-rounding sequence per lane).
+(bitwise for the 1-D reductions). There is ONE oracle body per kernel
+shape, parameterized by the same ``CompensationScheme`` callables the
+kernel body traces — the per-mode ``if/elif`` chains are gone, and any
+scheme registered in ``repro.kernels.schemes`` gets its oracle for free,
+bitwise-matching by construction.
 
 The accumulator merge policy is owned by ``repro.kernels.engine``;
-``merge_accumulators`` is re-exported here for back-compat.
+``merge_accumulators`` is re-exported here for back-compat. The
+deprecated ``mode=`` kwarg resolves through the registry (warning once
+per call site).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kahan as K
+from repro.kernels import schemes as _schemes
 from repro.kernels.engine import merge_accumulators  # noqa: F401  (re-export)
+from repro.kernels.schemes import CompensationScheme
+
+SchemeSpec = Union[str, CompensationScheme, None]
 
 
 def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
@@ -28,93 +37,89 @@ def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
     return x
 
 
-def dot_ref(a: jax.Array, b: jax.Array, mode: str = "kahan",
-            rows: int = 8, lanes: int = 128) -> jax.Array:
+def _resolve(scheme: SchemeSpec, mode: Optional[str],
+             stacklevel: int = 4) -> CompensationScheme:
+    return _schemes.resolve_scheme(
+        _schemes.resolve_legacy_mode(mode, scheme, stacklevel=stacklevel))
+
+
+def dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
+            rows: int = 8, lanes: int = 128, *,
+            mode: Optional[str] = None) -> jax.Array:
     """Oracle for the dot kernels.
 
     Accumulation layout matches the kernel: data is viewed as
     ``[steps, rows, lanes]``; a (rows, lanes) grid of accumulators is
-    Kahan-updated once per step; accumulators are then merged with two-sum
-    in the same tree order as the wrapper.
+    updated once per step via ``scheme.mul_update`` (the same callable
+    the kernel body traces — bitwise by construction); accumulators are
+    then merged with two-sum in the same tree order as the engine.
     """
+    sch = _resolve(scheme, mode)
     a = _pad_to(jnp.ravel(a).astype(jnp.float32), rows * lanes)
     b = _pad_to(jnp.ravel(b).astype(jnp.float32), rows * lanes)
     am = a.reshape(-1, rows, lanes)
     bm = b.reshape(-1, rows, lanes)
+    steps = jnp.arange(am.shape[0], dtype=jnp.int32)
 
-    if mode == "naive":
-        def body(carry, ab):
-            s, c = carry
-            x, y = ab
-            return (s + x * y, c), None
-    elif mode == "kahan":
-        def body(carry, ab):
-            s, c = carry
-            x, y = ab
-            s, c = K.kahan_step(s, c, x * y)
-            return (s, c), None
-    elif mode == "dot2":
-        def body(carry, ab):
-            s, c = carry
-            x, y = ab
-            p, ep = K.two_prod(x, y)
-            s, es = K.two_sum(s, p)
-            return (s, c + (ep + es)), None
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    def body(carry, xs):
+        s, c = carry
+        x, y, g = xs
+        return sch.mul_update(s, c, x, y, g), None
 
     init = (jnp.zeros((rows, lanes), jnp.float32),
             jnp.zeros((rows, lanes), jnp.float32))
-    (s, c), _ = jax.lax.scan(body, init, (am, bm))
+    (s, c), _ = jax.lax.scan(body, init, (am, bm, steps))
     return merge_accumulators(s, c)
 
 
-def sum_ref(x: jax.Array, mode: str = "kahan",
-            rows: int = 8, lanes: int = 128) -> jax.Array:
+def sum_ref(x: jax.Array, scheme: SchemeSpec = None,
+            rows: int = 8, lanes: int = 128, *,
+            mode: Optional[str] = None) -> jax.Array:
     """Oracle for the sum kernels (single-stream dot with b == 1)."""
+    sch = _resolve(scheme, mode)
     x = _pad_to(jnp.ravel(x).astype(jnp.float32), rows * lanes)
     xm = x.reshape(-1, rows, lanes)
+    steps = jnp.arange(xm.shape[0], dtype=jnp.int32)
 
-    if mode == "naive":
-        def body(carry, row):
-            s, c = carry
-            return (s + row, c), None
-    elif mode == "kahan":
-        def body(carry, row):
-            s, c = carry
-            s, c = K.kahan_step(s, c, row)
-            return (s, c), None
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    def body(carry, xs):
+        s, c = carry
+        row, g = xs
+        return sch.update(s, c, row, g), None
 
     init = (jnp.zeros((rows, lanes), jnp.float32),
             jnp.zeros((rows, lanes), jnp.float32))
-    (s, c), _ = jax.lax.scan(body, init, xm)
+    (s, c), _ = jax.lax.scan(body, init, (xm, steps))
     return merge_accumulators(s, c)
 
 
-def batched_dot_ref(a: jax.Array, b: jax.Array, mode: str = "kahan",
-                    rows: int = 8, lanes: int = 128) -> jax.Array:
+def batched_dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
+                    rows: int = 8, lanes: int = 128, *,
+                    mode: Optional[str] = None) -> jax.Array:
     """Oracle for the batched dot grid: vmap of the single oracle over the
     leading batch axis — per row, the identical rounding sequence."""
-    fn = functools.partial(dot_ref, mode=mode, rows=rows, lanes=lanes)
+    sch = _resolve(scheme, mode)
+    fn = functools.partial(dot_ref, scheme=sch, rows=rows, lanes=lanes)
     return jax.vmap(fn)(a, b)
 
 
-def batched_sum_ref(x: jax.Array, mode: str = "kahan",
-                    rows: int = 8, lanes: int = 128) -> jax.Array:
+def batched_sum_ref(x: jax.Array, scheme: SchemeSpec = None,
+                    rows: int = 8, lanes: int = 128, *,
+                    mode: Optional[str] = None) -> jax.Array:
     """Oracle for the batched sum grid (see ``batched_dot_ref``)."""
-    fn = functools.partial(sum_ref, mode=mode, rows=rows, lanes=lanes)
+    sch = _resolve(scheme, mode)
+    fn = functools.partial(sum_ref, scheme=sch, rows=rows, lanes=lanes)
     return jax.vmap(fn)(x)
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
-               mode: str = "kahan") -> jax.Array:
-    """Oracle for kahan_matmul: fp32 MXU-style per-tile products with
-    compensated accumulation across K tiles.
+               scheme: SchemeSpec = None, *,
+               mode: Optional[str] = None) -> jax.Array:
+    """Oracle for kahan_matmul: fp32 MXU-style per-tile products folded
+    across K tiles with ``scheme.update``.
 
     a: [M, K], b: [K, N] (any float dtype; compute fp32).
     """
+    sch = _resolve(scheme, mode)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
@@ -125,21 +130,18 @@ def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
     kt = a.shape[1] // bk
     a3 = a.reshape(m, kt, bk).transpose(1, 0, 2)  # [kt, M, bk]
     b3 = b.reshape(kt, bk, n)                      # [kt, bk, N]
+    steps = jnp.arange(kt, dtype=jnp.int32)
 
-    def body(carry, ab):
+    def body(carry, xs):
         s, c = carry
-        at, bt = ab
+        at, bt, g = xs
         prod = jnp.dot(at.astype(jnp.float32), bt.astype(jnp.float32),
                        preferred_element_type=jnp.float32)
-        if mode == "kahan":
-            s, c = K.kahan_step(s, c, prod)
-        else:
-            s = s + prod
-        return (s, c), None
+        return sch.update(s, c, prod, g), None
 
     init = (jnp.zeros((m, n), jnp.float32), jnp.zeros((m, n), jnp.float32))
-    (s, c), _ = jax.lax.scan(body, init, (a3, b3))
-    return s + c
+    (s, c), _ = jax.lax.scan(body, init, (a3, b3, steps))
+    return sch.finalize(s, c)
 
 
 def matmul_exact_f64(a: jax.Array, b: jax.Array) -> jax.Array:

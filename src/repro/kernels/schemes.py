@@ -1,0 +1,403 @@
+"""First-class compensation-scheme registry + the ``Policy`` API.
+
+The paper's whole method is *comparing variants* of one reduction loop —
+naive vs compensated, across unroll factors — through one model. This
+module makes that variant axis first-class: a ``CompensationScheme``
+bundles everything one variant needs, and every layer of the repo
+resolves variants through the registry instead of its own ``if mode ==``
+chain:
+
+* ``update`` / ``mul_update`` / ``finalize`` — the pure-jnp accumulator
+  callables. The Pallas kernel bodies (``kahan_dot`` / ``kahan_sum`` /
+  ``kahan_matmul`` / ``flash_attention``) and the jnp oracles
+  (``kernels.ref``) call the SAME callables, so kernel-vs-oracle bitwise
+  equality holds *by construction* for every scheme, including ones
+  registered after import.
+* ``error_bound`` — an a-priori relative-error bound for a length-``n``
+  dot with condition number ``cond`` (the accuracy-benchmark column).
+* ``instruction_mix`` — adds/muls per scalar iteration, consumed by
+  ``repro.core.ecm`` to derive its kernel tables (no parallel hardcoded
+  variant list in the model).
+
+Built-ins: ``naive``, ``kahan`` (paper Fig. 1b), ``pairwise`` (two-level
+cascaded accumulation, the streaming form of pairwise summation), and
+``dot2`` (TwoProd + TwoSum per Ogita–Rump–Oishi).
+
+``Policy`` is the frozen call-site configuration (scheme, unroll, matmul
+blocks, interpret, compute dtype). ``use_policy(...)`` installs a
+context-local default so model / serving / benchmark layers resolve one
+policy object instead of threading ``mode=``/``unroll=`` kwargs through
+every call:
+
+    with use_policy(scheme="dot2", unroll=4):
+        ops.dot(a, b)            # dot2, unroll 4
+        ops.batched_asum(x)      # same policy
+
+The legacy ``mode: str`` kwarg everywhere resolves through this registry
+(with a ``DeprecationWarning``) and returns bitwise-identical results.
+
+Registering a new scheme makes it usable through ``ops.dot`` /
+``ops.asum`` / ``batched_*`` / ``sharded_*`` / ``matmul`` /
+``flash_attention``, visible to the ECM model, and swept by the accuracy
+benchmarks, with no edits outside the registration call:
+
+    schemes.register(CompensationScheme(name="mine", ...))
+    ops.dot(a, b, scheme="mine")
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kahan as K
+
+Array = jax.Array
+# (s, c, term, step) -> (s, c): fold one already-formed term into the
+# accumulator pair. ``step`` is the sequential grid-step index (int32;
+# pl.program_id in kernels, the scan counter in oracles) for schemes
+# whose update depends on position (pairwise's cascade fold).
+UpdateFn = Callable[[Array, Array, Array, Array], Tuple[Array, Array]]
+# (s, c, a, b, step) -> (s, c): fused product-accumulate, for schemes
+# where the product's rounding error matters (dot2's TwoProd).
+MulUpdateFn = Callable[[Array, Array, Array, Array, Array], Tuple[Array, Array]]
+
+#: fp32 unit roundoff, the default for ``error_bound`` (kernels compute fp32).
+EPS32 = 2.0 ** -24
+
+#: pairwise cascade interval: the primary accumulator folds into the
+#: secondary every FOLD sequential steps, bounding per-cell error growth
+#: to O(FOLD + steps/FOLD) instead of O(steps).
+PAIRWISE_FOLD = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class InstructionMix:
+    """Adds/muls executed per scalar iteration of the scheme's dot loop
+    (the paper's accounting unit; useful flops per update is always 2)."""
+
+    adds: int
+    muls: int
+
+    @property
+    def flops(self) -> int:
+        return self.adds + self.muls
+
+
+@dataclasses.dataclass(frozen=True)
+class CompensationScheme:
+    """One variant of the compensated reduction loop.
+
+    All state is the engine's ``(s, c)`` accumulator pair with
+    ``finalize(s, c) = s + c`` (the shared convention — merges, batching,
+    and sharding all assume it). ``update``/``mul_update`` must be pure
+    jnp so the same callable traces inside Pallas kernel bodies and
+    ``lax.scan`` oracles, which is what makes kernel-vs-oracle equality
+    bitwise for free.
+    """
+
+    name: str
+    update: UpdateFn
+    instruction_mix: InstructionMix
+    # (n, cond, eps) -> a-priori relative-error bound for a length-n dot.
+    error_bound: Callable[..., float]
+    mul_update: Optional[MulUpdateFn] = None
+    description: str = ""
+
+    def __post_init__(self):
+        if self.mul_update is None:
+            upd = self.update
+            object.__setattr__(
+                self, "mul_update",
+                lambda s, c, a, b, step, _u=upd: _u(s, c, a * b, step))
+
+    @staticmethod
+    def finalize(s: Array, c: Array) -> Array:
+        """Collapse the pair to the best single estimate (the one
+        convention every merge in the repo shares)."""
+        return s + c
+
+
+# ---------------------------------------------------------------------------
+# Built-in schemes
+# ---------------------------------------------------------------------------
+
+def _naive_update(s, c, x, step):
+    del step
+    return s + x, c
+
+
+def _kahan_update(s, c, x, step):
+    del step
+    return K.kahan_step(s, c, x)
+
+
+def _pairwise_update(s, c, x, step):
+    """Two-level cascade (streaming pairwise): accumulate into ``s``,
+    fold ``s`` into ``c`` every PAIRWISE_FOLD steps. The fold and the
+    final ``s + c`` are the only cross-level adds, so per-cell error
+    grows O(FOLD + steps/FOLD); the lane grid and the engine's two-sum
+    merge tree supply the rest of the pairwise structure."""
+    s = s + x
+    fold = (step % PAIRWISE_FOLD) == (PAIRWISE_FOLD - 1)
+    c = jnp.where(fold, c + s, c)
+    s = jnp.where(fold, jnp.zeros_like(s), s)
+    return s, c
+
+
+def _dot2_update(s, c, x, step):
+    """TwoSum accumulation (Sum2 of Ogita–Rump–Oishi): the error of every
+    add is captured exactly and parked in ``c``."""
+    del step
+    s, e = K.two_sum(s, x)
+    return s, c + e
+
+
+def _dot2_mul_update(s, c, a, b, step):
+    """TwoProd + TwoSum (Dot2): both the product and the accumulation
+    rounding errors are captured exactly (Veltkamp-split TwoProd — no
+    fused-multiply-add assumption on the VPU)."""
+    del step
+    p, ep = K.two_prod(a, b)
+    s, es = K.two_sum(s, p)
+    return s, c + (ep + es)
+
+
+def _naive_bound(n: int, cond: float, eps: float = EPS32) -> float:
+    # gamma_{n-1} * cond / 2: recursive summation of rounded products.
+    return 0.5 * n * eps * cond
+
+
+def _kahan_bound(n: int, cond: float, eps: float = EPS32) -> float:
+    # compensated sum kills the O(n) term; the rounded products leave the
+    # eps*cond/2 floor (Kahan compensates the SUM, not the products).
+    return (eps + 2.0 * n * eps * eps) * cond
+
+
+def _pairwise_bound(n: int, cond: float, eps: float = EPS32) -> float:
+    # two-level cascade: effective chain length FOLD + n/FOLD (coarse —
+    # the kernel's lane grid shortens real chains much further).
+    eff = PAIRWISE_FOLD + math.ceil(n / PAIRWISE_FOLD)
+    return 0.5 * eff * eps * cond
+
+
+def _dot2_bound(n: int, cond: float, eps: float = EPS32) -> float:
+    # twice-working-precision: eps + gamma^2 * cond (Ogita et al. Prop.
+    # 5.4 shape) — the cond term only surfaces past cond ~ 1/eps.
+    g = 2.0 * n * eps
+    return eps + 0.5 * g * g * cond
+
+
+NAIVE = CompensationScheme(
+    name="naive",
+    update=_naive_update,
+    instruction_mix=InstructionMix(adds=1, muls=1),
+    error_bound=_naive_bound,
+    description="s += a*b (paper Fig. 1a); error grows O(n)",
+)
+
+KAHAN = CompensationScheme(
+    name="kahan",
+    update=_kahan_update,
+    instruction_mix=InstructionMix(adds=4, muls=1),
+    error_bound=_kahan_bound,
+    description="compensated accumulation (paper Fig. 1b); O(eps) sum error",
+)
+
+PAIRWISE = CompensationScheme(
+    name="pairwise",
+    update=_pairwise_update,
+    instruction_mix=InstructionMix(adds=2, muls=1),
+    error_bound=_pairwise_bound,
+    description="two-level cascaded accumulation (streaming pairwise)",
+)
+
+DOT2 = CompensationScheme(
+    name="dot2",
+    update=_dot2_update,
+    mul_update=_dot2_mul_update,
+    # canonical FMA-based Ogita accounting (17 flops/elem) — the figure
+    # the follow-up studies quote and the pre-existing ECM table used;
+    # the split-based fp32 kernel executes more raw VPU ops, but the
+    # model keeps the canonical count for cross-paper comparability.
+    instruction_mix=InstructionMix(adds=13, muls=4),
+    error_bound=_dot2_bound,
+    description="TwoProd+TwoSum (Ogita-Rump-Oishi Dot2); twice-precision",
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, CompensationScheme] = {}
+
+
+def register(scheme: CompensationScheme, *, override: bool = False) -> CompensationScheme:
+    """Add a scheme to the registry (returns it, for decorator-ish use).
+
+    After registration the scheme works through every entry point —
+    ``ops.dot``/``asum``/``matmul``, batched and sharded variants,
+    ``flash_attention`` — and appears in the ECM tables and the
+    registry-driven benchmark sweeps. ``override=True`` replaces an
+    existing name (note: jit caches key on the scheme *object*, so a
+    replaced scheme never aliases stale compiled code).
+    """
+    if not isinstance(scheme, CompensationScheme):
+        raise TypeError(f"expected CompensationScheme, got {type(scheme)!r}")
+    if scheme.name in _REGISTRY and not override:
+        raise ValueError(
+            f"scheme {scheme.name!r} already registered "
+            f"(pass override=True to replace)")
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def unregister(name: str) -> None:
+    """Remove a scheme (tests / plugin teardown). Built-ins included —
+    there is nothing special about them beyond being pre-registered."""
+    _REGISTRY.pop(name, None)
+
+
+def names() -> Tuple[str, ...]:
+    """Registered scheme names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def registered() -> Dict[str, CompensationScheme]:
+    """Snapshot of the registry (copy — safe to iterate while registering)."""
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> CompensationScheme:
+    """Look up a scheme by name; unknown names FAIL FAST with the full
+    menu (the API-boundary validation — kernels never see bad names)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compensation scheme {name!r}; registered schemes: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+for _s in (NAIVE, KAHAN, PAIRWISE, DOT2):
+    register(_s)
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Frozen per-call-site configuration for the compensated reductions.
+
+    scheme         registered scheme name or a CompensationScheme object
+    unroll         accumulator-group count U; 1-D kernel block is (8*U, 128)
+    blocks         matmul (block_m, block_n, block_k) tile sizes
+    interpret      None -> engine.resolve_interpret (Mosaic only on TPU)
+    compute_dtype  accumulator dtype; the Pallas kernels are fp32-only
+                   today, so anything else fails fast at construction
+
+    Resolution: explicit kwargs at a call site > the call's Policy >
+    the ambient ``use_policy`` default.
+    """
+
+    scheme: Union[str, CompensationScheme] = "kahan"
+    unroll: int = 8
+    blocks: Tuple[int, int, int] = (256, 256, 512)
+    interpret: Optional[bool] = None
+    compute_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        # fail fast at the boundary: bad scheme names and unsupported
+        # compute dtypes never reach a kernel trace.
+        object.__setattr__(self, "scheme", resolve_scheme(self.scheme))
+        if jnp.dtype(self.compute_dtype) != jnp.dtype(jnp.float32):
+            raise ValueError(
+                "Policy.compute_dtype: the Pallas kernels accumulate in "
+                f"float32 only (got {jnp.dtype(self.compute_dtype)!r})")
+        if self.unroll < 1:
+            raise ValueError(f"Policy.unroll must be >= 1, got {self.unroll}")
+
+
+def resolve_scheme(spec: Union[str, CompensationScheme, None]) -> CompensationScheme:
+    """str -> registry lookup (fail-fast); scheme -> itself; None -> the
+    ambient policy's scheme."""
+    if spec is None:
+        return current_policy().scheme  # already resolved by Policy
+    if isinstance(spec, CompensationScheme):
+        return spec
+    if isinstance(spec, str):
+        return get(spec)
+    raise TypeError(
+        f"scheme must be a name, CompensationScheme, or None; got {spec!r}")
+
+
+_POLICY: contextvars.ContextVar[Policy] = contextvars.ContextVar("repro_policy")
+_DEFAULT_POLICY = Policy()
+
+
+def current_policy() -> Policy:
+    """The ambient Policy (innermost ``use_policy``, else the default)."""
+    return _POLICY.get(_DEFAULT_POLICY)
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[Policy] = None, /, **overrides):
+    """Install a Policy as the context default.
+
+    Either pass a ``Policy`` or field overrides applied on top of the
+    current ambient policy::
+
+        with use_policy(scheme="dot2", unroll=4):
+            ops.dot(a, b)                # dot2, unroll 4
+
+    Context-local (contextvars), so nested/with-threads usage behaves.
+    """
+    if policy is None:
+        policy = dataclasses.replace(current_policy(), **overrides)
+    elif overrides:
+        raise TypeError("pass a Policy or field overrides, not both")
+    elif not isinstance(policy, Policy):
+        raise TypeError(f"expected Policy, got {type(policy)!r}")
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# Legacy ``mode=`` alias
+# ---------------------------------------------------------------------------
+
+_MODE_DEPRECATION = (
+    "the 'mode=' kwarg is deprecated; pass scheme=<name|CompensationScheme> "
+    "or a Policy (repro.kernels.schemes) — mode strings resolve through the "
+    "same registry and return bitwise-identical results")
+
+
+def resolve_legacy_mode(mode: Optional[str],
+                        scheme: Union[str, CompensationScheme, None],
+                        stacklevel: int = 3,
+                        ) -> Union[str, CompensationScheme, None]:
+    """Fold a deprecated ``mode=`` kwarg into the ``scheme`` slot.
+
+    Warns (DeprecationWarning, attributed to the caller's caller by
+    default — internal repro call sites therefore trip the CI gate in
+    scripts/ci.sh) and returns the spec to use. Passing both is an error.
+    """
+    if mode is None:
+        return scheme
+    if scheme is not None:
+        raise TypeError("pass scheme= or the deprecated mode=, not both")
+    warnings.warn(_MODE_DEPRECATION, DeprecationWarning, stacklevel=stacklevel)
+    return mode

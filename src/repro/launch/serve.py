@@ -1,13 +1,19 @@
 """Serving launcher: batched generation over the model-zoo API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        [--batch 4] [--new-tokens 32] [--stats]
+        [--batch 4] [--new-tokens 32] [--stats] [--scheme kahan] \
+        [--unroll 8]
 
 ``--stats`` turns on the compensated telemetry path: per-request squared
 logit norms computed with the engine's batched (batch, steps) Pallas grid
 (``models.layers.activation_sq_norm`` — the ``(s, c)`` accumulator
 contract with the deterministic two-sum merge), one kernel launch per
 decode step for the whole batch.
+
+``--scheme`` picks any registered compensation scheme (naive / kahan /
+pairwise / dot2 / plugins) — the launcher builds ONE
+``repro.kernels.Policy`` and hands it to the server instead of threading
+``mode=``/``unroll=`` kwargs through the stack.
 """
 
 import argparse
@@ -16,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
+from repro.kernels import Policy, schemes
 from repro.train import ServeConfig, Server
 
 
@@ -29,11 +36,20 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--stats", action="store_true",
                     help="print compensated per-request logit norms")
+    ap.add_argument("--scheme", default="kahan",
+                    help="compensation scheme for the telemetry reductions "
+                         f"(registered: {', '.join(sorted(schemes.names()))}"
+                         "; runtime-registered schemes accepted — unknown "
+                         "names fail fast with the menu)")
+    ap.add_argument("--unroll", type=int, default=8,
+                    help="accumulator-group count of the Pallas kernels")
     args = ap.parse_args()
 
+    policy = Policy(scheme=args.scheme, unroll=args.unroll)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     server = Server(cfg, ServeConfig(temperature=args.temperature,
-                                     track_stats=args.stats))
+                                     track_stats=args.stats,
+                                     policy=policy))
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
@@ -50,7 +66,7 @@ def main():
     if args.stats and server.last_stats:
         norms = np.stack([np.asarray(s) for s in server.last_stats])  # [T,B]
         for i in range(norms.shape[1]):
-            print(f"request {i}: |logits|^2 (kahan) "
+            print(f"request {i}: |logits|^2 ({args.scheme}) "
                   f"first={norms[0, i]:.6e} last={norms[-1, i]:.6e}")
 
 

@@ -513,9 +513,10 @@ def mlp_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
 # Compensated activation telemetry (engine-backed)
 # ---------------------------------------------------------------------------
 
-def activation_sq_norm(x: jax.Array, *, mode: str = "kahan",
-                       mesh=None, axis: str = "data",
-                       interpret: Optional[bool] = None) -> jax.Array:
+def activation_sq_norm(x: jax.Array, *, scheme=None, mesh=None,
+                       axis: str = "data",
+                       interpret: Optional[bool] = None,
+                       mode: Optional[str] = None) -> jax.Array:
     """Per-request compensated squared L2 norm of an activation tensor.
 
     ``x``: [B, ...] (logits, hidden states). Returns [B] fp32 via the
@@ -524,6 +525,10 @@ def activation_sq_norm(x: jax.Array, *, mode: str = "kahan",
     serving/training telemetry hook: drift in these norms is the cheapest
     early signal of numerical divergence between precision configs.
 
+    ``scheme``: registered compensation-scheme name / CompensationScheme
+    / Policy; None resolves the ambient ``schemes.use_policy`` default.
+    ``mode=`` is the deprecated alias (registry-resolved, warns).
+
     With ``mesh``/``axis`` given, ``x`` is treated as batch-sharded over
     that mesh axis and each device reduces only its local requests; the
     result stays sharded like the batch (no cross-device fold is needed —
@@ -531,9 +536,11 @@ def activation_sq_norm(x: jax.Array, *, mode: str = "kahan",
     ``repro.distributed.collectives.sharded_asum``, which all-gathers the
     (s, c) grids and applies the deterministic two-sum tree.
     """
+    from repro.kernels import schemes as _schemes
     from repro.kernels.engine import CompensatedReduction
 
-    eng = CompensatedReduction(mode=mode, interpret=interpret)
+    scheme = _schemes.resolve_legacy_mode(mode, scheme)
+    eng = CompensatedReduction(scheme=scheme, interpret=interpret)
     flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
     sq = flat * flat
     if mesh is not None:

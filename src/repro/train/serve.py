@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.schemes import Policy
 from repro.models import build_model
 
 
@@ -37,6 +38,10 @@ class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0     # 0 = greedy
     track_stats: bool = False    # compensated per-request logit telemetry
+    # ONE policy object for every compensated reduction the server runs
+    # (telemetry norms today; compensated logit matmuls when they land).
+    # None -> the ambient ``repro.kernels.use_policy`` default.
+    policy: Optional[Policy] = None
 
 
 class Server:
@@ -70,8 +75,9 @@ class Server:
             if self.sc.track_stats:
                 # valid-vocab slice only: the padded region carries a
                 # -1e30 mask bias whose square overflows fp32
-                self.last_stats.append(
-                    activation_sq_norm(logits[:, :self.cfg.vocab_size]))
+                self.last_stats.append(activation_sq_norm(
+                    logits[:, :self.cfg.vocab_size],
+                    scheme=self.sc.policy))
             logits, cache = self._decode(self.params, cache, tok,
                                          jnp.asarray(s + i))
             tok = self._sample(logits, key, i + 1)

@@ -40,23 +40,23 @@ def _batch(b, n, seed=0, dtype=np.float32):
 # --- batched grid == per-call loop, bitwise ---------------------------------
 
 @pytest.mark.parametrize("n", SIZES)
-@pytest.mark.parametrize("mode", ["naive", "kahan", "dot2"])
-def test_batched_dot_bitwise_matches_loop(n, mode):
+@pytest.mark.parametrize("scheme", ["naive", "kahan", "dot2"])
+def test_batched_dot_bitwise_matches_loop(n, scheme):
     a, b = _batch(5, n, seed=n)
-    got = ops.batched_dot(a, b, mode=mode, unroll=2)
-    want = jnp.stack([ops.dot(a[i], b[i], mode=mode, unroll=2)
+    got = ops.batched_dot(a, b, scheme=scheme, unroll=2)
+    want = jnp.stack([ops.dot(a[i], b[i], scheme=scheme, unroll=2)
                       for i in range(a.shape[0])])
-    assert np.array_equal(np.asarray(got), np.asarray(want)), mode
+    assert np.array_equal(np.asarray(got), np.asarray(want)), scheme
 
 
 @pytest.mark.parametrize("n", SIZES)
-@pytest.mark.parametrize("mode", ["naive", "kahan"])
-def test_batched_asum_bitwise_matches_loop(n, mode):
+@pytest.mark.parametrize("scheme", ["naive", "kahan"])
+def test_batched_asum_bitwise_matches_loop(n, scheme):
     x, _ = _batch(4, n, seed=n + 7)
-    got = ops.batched_asum(x, mode=mode, unroll=2)
-    want = jnp.stack([ops.asum(x[i], mode=mode, unroll=2)
+    got = ops.batched_asum(x, scheme=scheme, unroll=2)
+    want = jnp.stack([ops.asum(x[i], scheme=scheme, unroll=2)
                       for i in range(x.shape[0])])
-    assert np.array_equal(np.asarray(got), np.asarray(want)), mode
+    assert np.array_equal(np.asarray(got), np.asarray(want)), scheme
 
 
 def test_batched_bf16_promotion_bitwise():
@@ -64,9 +64,9 @@ def test_batched_bf16_promotion_bitwise():
     padding; batched and per-call paths promote identically."""
     a, b = _batch(3, 4096, seed=3)
     a16, b16 = a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
-    got = ops.batched_dot(a16, b16, mode="kahan", unroll=2)
+    got = ops.batched_dot(a16, b16, scheme="kahan", unroll=2)
     assert got.dtype == engine.COMPUTE_DTYPE
-    want = jnp.stack([ops.dot(a16[i], b16[i], mode="kahan", unroll=2)
+    want = jnp.stack([ops.dot(a16[i], b16[i], scheme="kahan", unroll=2)
                       for i in range(3)])
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
@@ -75,19 +75,19 @@ def test_vmap_dispatches_to_batched_grid():
     """jax.vmap of the scalar entry points must produce the batched-grid
     result (custom_vmap rule), bitwise-equal to the per-call loop."""
     a, b = _batch(4, 8 * 128 * 2 + 9, seed=11)
-    vd = jax.vmap(lambda x, y: ops.dot(x, y, mode="kahan", unroll=2))(a, b)
-    ld = jnp.stack([ops.dot(a[i], b[i], mode="kahan", unroll=2)
+    vd = jax.vmap(lambda x, y: ops.dot(x, y, scheme="kahan", unroll=2))(a, b)
+    ld = jnp.stack([ops.dot(a[i], b[i], scheme="kahan", unroll=2)
                     for i in range(4)])
     assert np.array_equal(np.asarray(vd), np.asarray(ld))
-    vs = jax.vmap(lambda x: ops.asum(x, mode="kahan", unroll=2))(a)
-    ls = jnp.stack([ops.asum(a[i], mode="kahan", unroll=2) for i in range(4)])
+    vs = jax.vmap(lambda x: ops.asum(x, scheme="kahan", unroll=2))(a)
+    ls = jnp.stack([ops.asum(a[i], scheme="kahan", unroll=2) for i in range(4)])
     assert np.array_equal(np.asarray(vs), np.asarray(ls))
 
 
 # --- accumulator pytree ------------------------------------------------------
 
 def test_accumulator_pytree_and_combine():
-    eng = CompensatedReduction(mode="kahan", unroll=1)
+    eng = CompensatedReduction(scheme="kahan", unroll=1)
     a, b = _batch(1, 4096, seed=5)
     acc1 = eng.dot_accumulators(a[0, :2048], b[0, :2048])
     acc2 = eng.dot_accumulators(a[0, 2048:], b[0, 2048:])
@@ -101,7 +101,7 @@ def test_accumulator_pytree_and_combine():
 
 
 def test_accumulator_total_batched_is_vmap_of_tree():
-    eng = CompensatedReduction(mode="kahan", unroll=2)
+    eng = CompensatedReduction(scheme="kahan", unroll=2)
     x, _ = _batch(3, 8 * 128 * 4, seed=9)
     acc = eng.batched_sum_accumulators(x)
     got = acc.total()
@@ -146,7 +146,7 @@ def test_interpret_none_matches_explicit_on_cpu():
 def test_merge_sharded_equals_single_device_tree():
     """Function-level contract: the gather-side fold IS the single-device
     two-sum tree on the stacked per-device grids."""
-    eng = CompensatedReduction(mode="kahan", unroll=2)
+    eng = CompensatedReduction(scheme="kahan", unroll=2)
     x, _ = _batch(4, 8 * 128 * 2 * 3, seed=21)
     accs = [eng.sum_accumulators(x[i]) for i in range(4)]
     ss = jnp.stack([a.s for a in accs])
@@ -160,8 +160,8 @@ def test_merge_sharded_equals_single_device_tree():
 def test_sharded_asum_single_device_mesh():
     mesh = jax.make_mesh((1,), ("data",))
     x, _ = _batch(1, 8 * 128 * 4 + 13, seed=23)
-    got = coll.sharded_asum(mesh, x[0], mode="kahan", unroll=2)
-    want = CompensatedReduction(mode="kahan", unroll=2).asum(x[0])
+    got = coll.sharded_asum(mesh, x[0], scheme="kahan", unroll=2)
+    want = CompensatedReduction(scheme="kahan", unroll=2).asum(x[0])
     assert float(got) == float(want)
 
 
@@ -184,9 +184,9 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     rng = np.random.default_rng(2)
     n = 2 * (8 * 128 * 2 * 3)
     x = jnp.asarray(rng.standard_normal(n) * 1e3, jnp.float32)
-    got = coll.sharded_asum(mesh, x, mode="kahan", unroll=2)
+    got = coll.sharded_asum(mesh, x, scheme="kahan", unroll=2)
 
-    eng = CompensatedReduction(mode="kahan", unroll=2)
+    eng = CompensatedReduction(scheme="kahan", unroll=2)
     shards = x.reshape(2, n // 2)
     accs = [eng.sum_accumulators(shards[i]) for i in range(2)]
     ss = jnp.stack([a.s for a in accs])

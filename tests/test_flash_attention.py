@@ -21,14 +21,14 @@ def _ref(q, k, v, causal):
 
 @pytest.mark.parametrize("shape", [(1, 256, 256, 64), (2, 512, 256, 128)])
 @pytest.mark.parametrize("causal", [True, False])
-@pytest.mark.parametrize("mode", ["naive", "kahan"])
-def test_matches_oracle(shape, causal, mode):
+@pytest.mark.parametrize("scheme", ["naive", "kahan"])
+def test_matches_oracle(shape, causal, scheme):
     bh, sq, skv, dh = shape
     rng = np.random.default_rng(sq + dh)
     q = jnp.asarray(rng.standard_normal((bh, sq, dh)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
-    out = flash_attention(q, k, v, block_q=128, block_k=128, mode=mode,
+    out = flash_attention(q, k, v, block_q=128, block_k=128, scheme=scheme,
                           causal=causal)
     want = _ref(q, k, v, causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
@@ -69,9 +69,9 @@ def test_kahan_accumulators_beat_naive_on_many_blocks():
     want = p64 @ v.astype(np.float64)
 
     errs = {}
-    for mode in ("naive", "kahan"):
+    for scheme in ("naive", "kahan"):
         out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                              block_q=128, block_k=64, mode=mode)
-        errs[mode] = float(np.max(np.abs(np.asarray(out, np.float64) - want)
+                              block_q=128, block_k=64, scheme=scheme)
+        errs[scheme] = float(np.max(np.abs(np.asarray(out, np.float64) - want)
                                   / (np.abs(want) + 1e-3)))
     assert errs["kahan"] <= errs["naive"] * 1.01, errs

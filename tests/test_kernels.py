@@ -25,22 +25,22 @@ def _data(n, dtype=np.float32, seed=0):
 
 
 @pytest.mark.parametrize("n", SIZES)
-@pytest.mark.parametrize("mode", ["naive", "kahan", "dot2"])
+@pytest.mark.parametrize("scheme", ["naive", "kahan", "dot2"])
 @pytest.mark.parametrize("unroll", [1, 4])
-def test_dot_kernel_matches_oracle(n, mode, unroll):
+def test_dot_kernel_matches_oracle(n, scheme, unroll):
     a, b = _data(n, seed=n)
-    got = ops.dot(jnp.asarray(a), jnp.asarray(b), mode=mode, unroll=unroll)
-    want = ref.dot_ref(jnp.asarray(a), jnp.asarray(b), mode=mode,
+    got = ops.dot(jnp.asarray(a), jnp.asarray(b), scheme=scheme, unroll=unroll)
+    want = ref.dot_ref(jnp.asarray(a), jnp.asarray(b), scheme=scheme,
                        rows=8 * unroll)
-    assert float(got) == float(want), f"{mode} unroll={unroll} not bitwise"
+    assert float(got) == float(want), f"{scheme} unroll={unroll} not bitwise"
 
 
 @pytest.mark.parametrize("n", SIZES)
-@pytest.mark.parametrize("mode", ["naive", "kahan"])
-def test_sum_kernel_matches_oracle(n, mode):
+@pytest.mark.parametrize("scheme", ["naive", "kahan"])
+def test_sum_kernel_matches_oracle(n, scheme):
     a, _ = _data(n, seed=n + 1)
-    got = ops.asum(jnp.asarray(a), mode=mode, unroll=2)
-    want = ref.sum_ref(jnp.asarray(a), mode=mode, rows=16)
+    got = ops.asum(jnp.asarray(a), scheme=scheme, unroll=2)
+    want = ref.sum_ref(jnp.asarray(a), scheme=scheme, rows=16)
     assert float(got) == float(want)
 
 
@@ -50,8 +50,8 @@ def test_dot_kernel_bf16_inputs():
     b = rng.standard_normal(4096).astype(np.float32)
     a16 = jnp.asarray(a).astype(jnp.bfloat16)
     b16 = jnp.asarray(b).astype(jnp.bfloat16)
-    got = ops.dot(a16, b16, mode="kahan")
-    want = ref.dot_ref(a16, b16, mode="kahan", rows=64)
+    got = ops.dot(a16, b16, scheme="kahan")
+    want = ref.dot_ref(a16, b16, scheme="kahan", rows=64)
     assert float(got) == float(want)
     # and it should be close to the fp32 result (inputs quantized to bf16)
     exact = numerics.exact_dot(np.asarray(a16, np.float32),
@@ -61,15 +61,15 @@ def test_dot_kernel_bf16_inputs():
 
 @pytest.mark.parametrize("shape", [(32, 256, 64), (100, 700, 130),
                                    (8, 1024, 128)])
-@pytest.mark.parametrize("mode", ["naive", "kahan"])
-def test_matmul_kernel_matches_oracle(shape, mode):
+@pytest.mark.parametrize("scheme", ["naive", "kahan"])
+def test_matmul_kernel_matches_oracle(shape, scheme):
     m, k, n = shape
     rng = np.random.default_rng(m + k)
     a = rng.standard_normal((m, k)).astype(np.float32)
     b = rng.standard_normal((k, n)).astype(np.float32)
     got = ops.matmul(jnp.asarray(a), jnp.asarray(b), block_m=32,
-                     block_n=128, block_k=256, mode=mode)
-    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b), bk=256, mode=mode)
+                     block_n=128, block_k=256, scheme=scheme)
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b), bk=256, scheme=scheme)
     exact = ref.matmul_exact_f64(a, b)
     scale = np.abs(exact).max()
     assert np.abs(np.asarray(got) - np.asarray(want)).max() / scale < 2e-6
@@ -85,9 +85,9 @@ def test_kahan_matmul_beats_naive_on_long_k():
     b = (rng.standard_normal((k, n)) * 10).astype(np.float32)
     exact = ref.matmul_exact_f64(a, b)
     kah = ops.matmul(jnp.asarray(a), jnp.asarray(b), block_m=8,
-                     block_n=128, block_k=128, mode="kahan")
+                     block_n=128, block_k=128, scheme="kahan")
     nai = ops.matmul(jnp.asarray(a), jnp.asarray(b), block_m=8,
-                     block_n=128, block_k=128, mode="naive")
+                     block_n=128, block_k=128, scheme="naive")
     err_k = np.abs(np.asarray(kah, np.float64) - exact).max()
     err_n = np.abs(np.asarray(nai, np.float64) - exact).max()
     assert err_k <= err_n
@@ -96,8 +96,8 @@ def test_kahan_matmul_beats_naive_on_long_k():
 def test_accuracy_ordering_ill_conditioned():
     a, b, exact, cond = numerics.gen_dot(8192, 1e6, seed=11)
     errs = {}
-    for mode in ("naive", "kahan", "dot2"):
-        got = ops.dot(jnp.asarray(a), jnp.asarray(b), mode=mode, unroll=1)
-        errs[mode] = numerics.relative_error(float(got), exact)
+    for scheme in ("naive", "kahan", "dot2"):
+        got = ops.dot(jnp.asarray(a), jnp.asarray(b), scheme=scheme, unroll=1)
+        errs[scheme] = numerics.relative_error(float(got), exact)
     assert errs["dot2"] <= errs["kahan"] * 1.01 + 1e-12
     assert errs["dot2"] < 1e-4

@@ -1,0 +1,328 @@
+"""Compensation-scheme registry + Policy API tests.
+
+The acceptance bar for the registry redesign:
+
+* every REGISTERED scheme's Pallas kernel matches its registered oracle
+  bitwise on the single, batched, and sharded-merge paths (the callables
+  are shared, so this pins the plumbing, not luck);
+* the accuracy ladder on GenDot data orders naive >= kahan >= dot2, with
+  dot2 beating kahan by >= 2 decimal digits at cond 1e10;
+* registering a toy scheme makes it usable through ops.dot / ops.asum /
+  batched_* / sharded_* and visible to core/ecm.py predictions with no
+  edits outside the registration call;
+* the legacy ``mode=`` kwarg returns bitwise-identical results and warns;
+* unknown scheme names fail fast at the API boundary with the registered
+  menu in the message.
+"""
+
+import dataclasses
+import functools
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ecm, kahan as K, numerics
+from repro.distributed import collectives as coll
+from repro.kernels import ops, ref, schemes
+from repro.kernels.engine import CompensatedReduction, merge_accumulators
+from repro.kernels.schemes import (
+    CompensationScheme,
+    InstructionMix,
+    Policy,
+    use_policy,
+)
+
+# ragged (pad-requiring) size, 3 sequential steps at unroll=1; the
+# pairwise cascade's fold branch needs > PAIRWISE_FOLD steps and gets its
+# own dedicated test below (interpret-mode grids cost wall time per step,
+# so the registry-wide sweeps stay small).
+N_BITWISE = 8 * 128 * 3 + 41
+
+
+def _data(n, seed=0):
+    r = np.random.default_rng(seed)
+    return (jnp.asarray(r.standard_normal(n), jnp.float32),
+            jnp.asarray(r.standard_normal(n), jnp.float32))
+
+
+# --- every registered scheme: kernel == oracle, bitwise ---------------------
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_registered_scheme_kernel_matches_oracle_bitwise(name):
+    a, b = _data(N_BITWISE, seed=1)
+    got = ops.dot(a, b, scheme=name, unroll=1)
+    want = ref.dot_ref(a, b, scheme=name, rows=8)
+    assert float(got) == float(want), f"dot[{name}] not bitwise"
+    gs = ops.asum(a, scheme=name, unroll=1)
+    ws = ref.sum_ref(a, scheme=name, rows=8)
+    assert float(gs) == float(ws), f"asum[{name}] not bitwise"
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_registered_scheme_batched_bitwise(name):
+    a, b = _data(3 * N_BITWISE, seed=2)
+    a = a.reshape(3, N_BITWISE)
+    b = b.reshape(3, N_BITWISE)
+    got = ops.batched_dot(a, b, scheme=name, unroll=1)
+    want = jnp.stack([ops.dot(a[i], b[i], scheme=name, unroll=1)
+                      for i in range(3)])
+    assert np.array_equal(np.asarray(got), np.asarray(want)), name
+    gs = ops.batched_asum(a, scheme=name, unroll=1)
+    ws = jnp.stack([ops.asum(a[i], scheme=name, unroll=1) for i in range(3)])
+    assert np.array_equal(np.asarray(gs), np.asarray(ws)), name
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_registered_scheme_sharded_merge_bitwise(name):
+    """Function-level sharded path: the gather-side fold of per-shard
+    (s, c) grids equals the single-device two-sum tree on the stacked
+    grids for every scheme (the shard_map wrapper adds no arithmetic —
+    the full-mesh run is pinned by the slow-tier engine tests)."""
+    eng = CompensatedReduction(scheme=name, unroll=1)
+    x, _ = _data(4 * 8 * 128 * 2, seed=3)
+    shards = x.reshape(4, -1)
+    accs = [eng.sum_accumulators(shards[i]) for i in range(4)]
+    ss = jnp.stack([a.s for a in accs])
+    cs = jnp.stack([a.c for a in accs])
+    got = coll.merge_sharded_accumulators(ss, cs)
+    want = merge_accumulators(ss, cs)
+    assert float(got) == float(want), name
+
+
+def test_pairwise_fold_path_bitwise():
+    """steps > PAIRWISE_FOLD so the cascade's fold branch actually fires
+    in both the kernel and the oracle — bitwise, and c must be engaged."""
+    n = 8 * 128 * (schemes.PAIRWISE_FOLD + 3) + 41
+    a, b = _data(n, seed=4)
+    got = ops.dot(a, b, scheme="pairwise", unroll=1)
+    want = ref.dot_ref(a, b, scheme="pairwise", rows=8)
+    assert float(got) == float(want)
+    eng = CompensatedReduction(scheme="pairwise", unroll=1)
+    acc = eng.sum_accumulators(a)
+    assert np.abs(np.asarray(acc.c)).max() > 0  # the cascade level filled
+
+
+# --- accuracy ladder on GenDot data -----------------------------------------
+
+#: requested GenDot condition numbers (the achieved cond is ~n/2 larger;
+#: printed by bench_accuracy). fp32 product rounding saturates any
+#: product-rounding scheme past achieved cond ~ 1/eps ~ 1.7e7.
+LADDER_CONDS = (1e4, 1e6, 1e8, 1e10, 1e12)
+SATURATION_COND = 1.0 / schemes.EPS32
+
+
+@functools.lru_cache(maxsize=None)
+def _ladder_errors(cond, n=8192):
+    a, b, exact, achieved = numerics.gen_dot(n, cond, seed=int(np.log10(cond)))
+    errs = {
+        name: numerics.relative_error(
+            float(ops.dot(jnp.asarray(a), jnp.asarray(b), scheme=name,
+                          unroll=1)), exact)
+        for name in ("naive", "kahan", "pairwise", "dot2")}
+    return errs, achieved
+
+
+@pytest.mark.parametrize("cond", LADDER_CONDS)
+def test_accuracy_ladder(cond):
+    errs, achieved = _ladder_errors(cond)
+    # dot2 (TwoProd kills the product floor) sits >= 2 decimal digits
+    # below BOTH product-rounding schemes at every condition number.
+    assert errs["dot2"] <= 1e-2 * errs["kahan"], (errs, achieved)
+    assert errs["dot2"] <= 1e-2 * errs["naive"], (errs, achieved)
+    if achieved < SATURATION_COND:
+        # meaningful regime: compensation strictly helps, the cascade
+        # never hurts.
+        assert errs["kahan"] <= errs["naive"], (errs, achieved)
+        assert errs["pairwise"] <= errs["naive"] * 1.01, (errs, achieved)
+    else:
+        # past saturation naive/kahan are both product-rounding noise of
+        # the same magnitude; only the scale may be compared.
+        assert errs["kahan"] <= errs["naive"] * 3.0, (errs, achieved)
+
+
+def test_dot2_beats_kahan_by_2_digits_at_cond_1e10():
+    errs, achieved = _ladder_errors(1e10)
+    assert errs["kahan"] / max(errs["dot2"], 1e-30) >= 100.0, (errs, achieved)
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_apriori_error_bound_holds(name):
+    errs, achieved = _ladder_errors(1e4)
+    bound = schemes.get(name).error_bound(8192, achieved)
+    assert np.isfinite(bound) and bound > 0
+    assert errs[name] <= bound, (name, errs[name], bound)
+
+
+# --- toy-scheme registration: one call, every entry point -------------------
+
+def _toy_scheme():
+    """TwoSum accumulation with a plainly-rounded product — distinct from
+    every built-in (kahan uses the 4-add step, dot2 adds TwoProd)."""
+    def update(s, c, x, step):
+        del step
+        s, e = K.two_sum(s, x)
+        return s, c + e
+
+    return CompensationScheme(
+        name="toy-sum2", update=update,
+        instruction_mix=InstructionMix(adds=7, muls=1),
+        error_bound=lambda n, cond, eps=schemes.EPS32: (eps + n * eps * eps)
+        * cond,
+        description="test-only: Sum2 accumulation of rounded products")
+
+
+def test_toy_scheme_reaches_every_entry_point():
+    toy = schemes.register(_toy_scheme())
+    try:
+        a, b = _data(8 * 128 * 2 + 17, seed=5)
+        ab = jnp.stack([a, a]), jnp.stack([b, b])
+        # ops + batched, kernel vs oracle bitwise — no edits anywhere
+        got = ops.dot(a, b, scheme="toy-sum2", unroll=1)
+        assert float(got) == float(ref.dot_ref(a, b, scheme=toy, rows=8))
+        assert float(ops.asum(a, scheme="toy-sum2", unroll=1)) == float(
+            ref.sum_ref(a, scheme=toy, rows=8))
+        bd = ops.batched_dot(ab[0], ab[1], scheme="toy-sum2", unroll=1)
+        assert float(bd[0]) == float(bd[1]) == float(got)
+        ba = ops.batched_asum(ab[0], scheme="toy-sum2", unroll=1)
+        assert np.asarray(ba).shape == (2,)
+        # sharded merge path (full shard_map run: slow tier below)
+        eng = CompensatedReduction(scheme="toy-sum2", unroll=1)
+        acc = eng.sum_accumulators(a)
+        stacked_s = jnp.stack([acc.s, acc.s])
+        stacked_c = jnp.stack([acc.c, acc.c])
+        merged = coll.merge_sharded_accumulators(stacked_s, stacked_c)
+        assert float(merged) == float(merge_accumulators(stacked_s,
+                                                         stacked_c))
+        # matmul path
+        m = jnp.asarray(np.random.default_rng(6).standard_normal((16, 256)),
+                        jnp.float32)
+        mm = ops.matmul(m, m.T, block_m=16, block_n=128, block_k=128,
+                        scheme="toy-sum2")
+        wm = ref.matmul_ref(m, m.T, bk=128, scheme=toy)
+        # within-tile jnp.dot may reassociate differently between the
+        # pallas-interpret and scan paths (see test_kernels) — tight, not
+        # bitwise
+        scale = np.abs(np.asarray(wm)).max()
+        assert np.abs(np.asarray(mm) - np.asarray(wm)).max() / scale < 2e-6
+        # ECM visibility: predictions derive from the registered mix
+        blk = ecm.tpu_block_for_scheme("toy-sum2")
+        assert blk.flops_per_elem == 8
+        assert "toy-sum2" in ecm.registry_tpu_blocks()
+        assert "toy-sum2" in ecm.registry_dot_kernels()
+        r = ecm.ecm_tpu_for_scheme(ecm.TPU_V5E, "toy-sum2")
+        assert r.kernel == "toy-sum2" and r.t_comp_cy > 0
+    finally:
+        schemes.unregister("toy-sum2")
+    with pytest.raises(ValueError):
+        ops.dot(a, b, scheme="toy-sum2")  # gone after unregister
+
+
+@pytest.mark.slow
+def test_toy_scheme_through_sharded_entry_point():
+    toy = _toy_scheme()
+    schemes.register(toy)
+    try:
+        mesh = jax.make_mesh((1,), ("data",))
+        x, _ = _data(8 * 128 * 2 * 3 + 13, seed=7)
+        got = coll.sharded_asum(mesh, x, scheme="toy-sum2", unroll=2)
+        want = CompensatedReduction(scheme=toy, unroll=2).asum(x)
+        assert float(got) == float(want)
+    finally:
+        schemes.unregister("toy-sum2")
+
+
+# --- legacy mode= alias ------------------------------------------------------
+
+def test_mode_alias_bitwise_identical_and_warns():
+    a, b = _data(8 * 128 * 2 + 9, seed=11)
+    for name in ("kahan", "naive"):
+        with pytest.warns(DeprecationWarning, match="mode="):
+            legacy = ops.dot(a, b, mode=name, unroll=2)
+        assert float(legacy) == float(ops.dot(a, b, scheme=name, unroll=2))
+        with pytest.warns(DeprecationWarning, match="mode="):
+            legacy_s = ops.asum(a, mode=name, unroll=2)
+        assert float(legacy_s) == float(ops.asum(a, scheme=name, unroll=2))
+    with pytest.warns(DeprecationWarning, match="mode="):
+        eng = CompensatedReduction(mode="kahan", unroll=2)
+    assert eng.scheme.name == "kahan"
+    with pytest.warns(DeprecationWarning, match="mode="):
+        legacy_ref = ref.dot_ref(a, b, mode="kahan")
+    assert float(legacy_ref) == float(ref.dot_ref(a, b, scheme="kahan"))
+
+
+def test_mode_and_scheme_together_is_an_error():
+    a, b = _data(1024, seed=12)
+    with pytest.raises(TypeError, match="not both"):
+        ops.dot(a, b, scheme="kahan", mode="naive")
+
+
+# --- fail-fast at the API boundary ------------------------------------------
+
+def test_unknown_scheme_fails_fast_with_menu():
+    a, b = _data(1024, seed=13)
+    for call in (lambda: ops.dot(a, b, scheme="bogus"),
+                 lambda: ops.asum(a, scheme="bogus"),
+                 lambda: ops.batched_asum(a.reshape(2, -1), scheme="bogus"),
+                 lambda: CompensatedReduction(scheme="bogus"),
+                 lambda: Policy(scheme="bogus")):
+        with pytest.raises(ValueError) as ei:
+            call()
+        msg = str(ei.value)
+        assert "bogus" in msg and "kahan" in msg and "dot2" in msg, msg
+
+
+# --- Policy / use_policy -----------------------------------------------------
+
+def test_policy_resolution_and_context_default():
+    a, b = _data(8 * 128 + 5, seed=17)
+    base = float(ops.dot(a, b, scheme="dot2", unroll=2))
+    kah = float(ops.dot(a, b, scheme="kahan", unroll=2))
+    # Policy object passed directly
+    pol = Policy(scheme="dot2", unroll=2)
+    assert float(ops.dot(a, b, scheme=pol)) == base
+    # ambient context default
+    with use_policy(scheme="dot2", unroll=2):
+        assert float(ops.dot(a, b)) == base
+        # explicit kwargs override the ambient policy
+        assert float(ops.dot(a, b, scheme="kahan", unroll=2)) == kah
+        with use_policy(Policy(scheme="naive", unroll=1)):
+            assert schemes.current_policy().scheme.name == "naive"
+        assert schemes.current_policy().scheme.name == "dot2"
+    # default restored
+    assert schemes.current_policy().scheme.name == "kahan"
+    assert schemes.current_policy().unroll == 8
+
+
+def test_policy_is_frozen_and_validates():
+    pol = Policy()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.unroll = 4
+    with pytest.raises(ValueError, match="float32"):
+        Policy(compute_dtype=jnp.float64)
+    with pytest.raises(ValueError, match="unroll"):
+        Policy(unroll=0)
+
+
+# --- exact_dot float64 path (satellite fix) ----------------------------------
+
+def test_exact_dot_float64_two_prod_error_terms():
+    """The float64 path must be correctly rounded even where the naive
+    products lose bits — pinned against exact rational arithmetic (the
+    pre-fix fallback appended 0.0 error terms on Python < 3.13)."""
+    rng = np.random.default_rng(23)
+    x = (1.0 + rng.uniform(size=64) * 2.0 ** -30).astype(np.float64)
+    y = (1.0 - rng.uniform(size=64) * 2.0 ** -30).astype(np.float64)
+    # cancellation: append the negated running sum so products matter
+    a = np.concatenate([x, [1.0]])
+    b = np.concatenate([y, [-float(np.sum(x * y))]])
+    got = numerics.exact_dot(a, b)
+    truth = sum((Fraction(u) * Fraction(v) for u, v in
+                 zip(a.tolist(), b.tolist())), Fraction(0))
+    assert got == float(truth), (got, float(truth))
+    # and the error-term helper itself is exact
+    for u, v in zip(x.tolist(), y.tolist()):
+        err = numerics._two_prod_err64(u, v)
+        assert Fraction(u * v) + Fraction(err) == Fraction(u) * Fraction(v)
