@@ -1,0 +1,54 @@
+"""Batched matmul engine: one (batch, m_blocks, n_blocks, k_steps) Pallas
+grid vs a Python loop of single matmul kernel calls.
+
+Same story as bench_batched, one rank up: the 2016 follow-up's claim that
+compensation stays free once the hardware is saturated turns, in batched
+serving, into "one grid launch amortizes dispatch across requests". The
+derived column reports Mflop/s over the whole batch (identical unit for
+grid and loop, so the ratio is the dispatch-amortization win); rows land
+in BENCH_*.json as ``batched_matmul_*``.
+
+Sweeps EVERY registered compensation scheme (the registry is the variant
+list) and pins the vmap dispatch row (``jax.vmap(ops.matmul)`` must land
+on the batched grid via the engine's custom_vmap rule).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, schemes
+
+
+def main(batch: int = 4, m: int = 64, k: int = 1024, n: int = 128,
+         block_m: int = 32, block_n: int = 128, block_k: int = 256) -> None:
+    print(f"# batched matmul engine: batch={batch} [{m}x{k}]@[{k}x{n}] "
+          "(one (batch, mb, nb, ks) grid vs per-call loop; interpret mode "
+          "validates the ordering, not TPU wall time)")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((batch, m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((batch, k, n)), jnp.float32)
+    flops = 2.0 * batch * m * k * n
+    bl = dict(block_m=block_m, block_n=block_n, block_k=block_k)
+
+    def loop_mm(x, y):
+        return jnp.stack([ops.matmul(x[i], y[i], scheme="kahan", **bl)
+                          for i in range(batch)])
+
+    for name in schemes.names():
+        us = time_fn(lambda x, y, s=name: ops.batched_matmul(
+            x, y, scheme=s, **bl), a, b)
+        emit(f"batched_matmul_{name}", us, f"{flops / us:.0f}Mflop/s")
+    us_loop = time_fn(loop_mm, a, b)
+    emit("batched_matmul_kahan_loop", us_loop, f"{flops / us_loop:.0f}Mflop/s")
+
+    # vmap dispatch sanity: custom_vmap must land on the batched grid
+    vm = jax.jit(jax.vmap(lambda x, y: ops.matmul(x, y, scheme="kahan",
+                                                  **bl)))
+    us = time_fn(vm, a, b)
+    emit("batched_matmul_kahan_vmap", us, f"{flops / us:.0f}Mflop/s")
+
+
+if __name__ == "__main__":
+    main()

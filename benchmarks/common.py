@@ -1,8 +1,20 @@
-"""Benchmark utilities: timing + CSV emission."""
+"""Benchmark utilities: timing + CSV emission + row capture.
+
+Every ``emit`` call also appends to ``ROWS`` so the orchestrator
+(benchmarks/run.py) can serialize the full sweep to a ``BENCH_*.json``
+artifact — the release-over-release perf trajectory.
+"""
 
 import time
 
 import jax
+
+#: rows captured by emit(): list of {name, us_per_call, derived} dicts.
+ROWS = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
 
 
 def time_fn(fn, *args, warmup=2, iters=5, **kw):
@@ -20,3 +32,5 @@ def time_fn(fn, *args, warmup=2, iters=5, **kw):
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                 "derived": derived})

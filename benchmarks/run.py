@@ -12,6 +12,8 @@ blocks). Mapping to the paper:
   bench_batched         batched engine: one (batch, steps) grid vs a
                         per-call loop (the 2016 follow-up's saturation
                         claim, in batched-serving form)
+  bench_matmul_batched  batched matmul engine: one (batch, mb, nb, ks)
+                        grid vs a per-call loop + the vmap dispatch row
   bench_scaling         Fig. 3 — multicore/multichip scaling + saturation
   bench_architectures   Table 2 / Fig. 4 — cross-generation comparison
   bench_flash_attention the §Perf-identified fix: fused attention with
@@ -23,10 +25,23 @@ Accumulator contract (every compensated row above): reductions carry an
 ``(s, c)`` pair with ``total = s + c``; partial grids merge through the
 deterministic two-sum tree in ``repro.kernels.engine.merge_accumulators``
 — cross-lane, cross-batch (vmap), and cross-device (collectives) alike.
+
+CLI::
+
+    python -m benchmarks.run                  # full sweep, CSV to stdout
+    python -m benchmarks.run --smoke          # tiny shapes (CI stage 3)
+    python -m benchmarks.run --json OUT.json  # also write the rows as a
+                                              # BENCH_*.json artifact
 """
 
+import argparse
+import json
 
-def main() -> None:
+
+def _benchmarks():
+    """(name, module, full_kwargs, smoke_kwargs) in run order. The smoke
+    kwargs shrink the parameterizable sweeps to CI-budget shapes; no-arg
+    modules are already smoke-sized (CPU interpret mode)."""
     from benchmarks import (
         bench_accuracy,
         bench_architectures,
@@ -34,17 +49,45 @@ def main() -> None:
         bench_dot_variants,
         bench_e2e,
         bench_flash_attention,
+        bench_matmul_batched,
         bench_roofline,
         bench_scaling,
     )
 
+    return [
+        ("bench_accuracy", bench_accuracy, {}, {"n": 1 << 11}),
+        ("bench_dot_variants", bench_dot_variants, {}, {"n": 1 << 14}),
+        ("bench_batched", bench_batched, {},
+         {"batch": 2, "n": 8 * 128 * 4}),
+        ("bench_matmul_batched", bench_matmul_batched, {},
+         {"batch": 2, "m": 32, "k": 512, "n": 128}),
+        ("bench_scaling", bench_scaling, {}, {}),
+        ("bench_architectures", bench_architectures, {}, {}),
+        ("bench_flash_attention", bench_flash_attention, {}, {}),
+        ("bench_e2e", bench_e2e, {}, {}),
+        ("bench_roofline", bench_roofline, {}, {}),
+    ]
+
+
+def main(smoke: bool = False, json_path: str = "") -> None:
+    from benchmarks import common
+
+    common.reset_rows()
     print("name,us_per_call,derived")
-    for mod in (bench_accuracy, bench_dot_variants, bench_batched,
-                bench_scaling, bench_architectures, bench_flash_attention,
-                bench_e2e, bench_roofline):
-        print(f"# ===== {mod.__name__} =====")
-        mod.main()
+    for name, mod, full_kw, smoke_kw in _benchmarks():
+        print(f"# ===== {name} =====")
+        mod.main(**(smoke_kw if smoke else full_kw))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"smoke": smoke, "rows": common.ROWS}, f, indent=1)
+        print(f"# wrote {len(common.ROWS)} rows to {json_path}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI benchmarks smoke stage)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write captured rows to a BENCH_*.json artifact")
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

@@ -31,7 +31,31 @@ def main():
     print(f"  kahan_sum     : {float(kahan_sum(jnp.asarray(x))):.1f}"
           "   (exact: 100004096)")
 
-    # 3. The ECM model: why Kahan is free on TPU when vectorized.
+    # 3. One Policy selects scheme x unroll x blocks x ACCUMULATE DTYPE
+    #    for every kernel. compute_dtype="float64" (needs x64) turns the
+    #    engine into its own verification oracle: the f64-accumulated
+    #    batched matmul is the reference the fp32 run is judged against.
+    from jax.experimental import enable_x64
+
+    from repro.kernels import use_policy
+
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((2, 16, 2048)) * 10, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2, 2048, 128)) * 10, jnp.float32)
+    c32 = {}
+    for scheme in ("naive", "kahan"):
+        with use_policy(scheme=scheme, blocks=(16, 128, 256)):
+            c32[scheme] = np.asarray(ops.batched_matmul(A, B), np.float64)
+    with enable_x64():
+        with use_policy(scheme="kahan", compute_dtype="float64",
+                        blocks=(16, 128, 256)):
+            c64 = np.asarray(ops.batched_matmul(A, B))
+    print("\nbatched_matmul [2,16,2048]@[2,2048,128], fp32 vs f64-verify:")
+    for scheme, c in c32.items():
+        err = np.abs(c - c64).max() / np.abs(c64).max()
+        print(f"  {scheme:6s} fp32 accumulate: max relerr vs f64 {err:.2e}")
+
+    # 4. The ECM model: why Kahan is free on TPU when vectorized.
     #    Variant descriptions derive from the scheme registry.
     from repro.core import ecm
     for k in (ecm.NAIVE_DOT_TPU, ecm.KAHAN_DOT_TPU, ecm.KAHAN_DOT_SEQ_TPU):

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
-# Two-stage CI: tier-1 (fast, must stay < 120 s) then the slow tier.
+# Three-stage CI: tier-1 (fast, must stay < 120 s), the slow tier, and a
+# benchmarks smoke stage (tiny shapes, interpret mode — every registered
+# benchmark in benchmarks/run.py, with the rows captured to a
+# BENCH_<date>.json artifact so the perf trajectory is tracked).
 #
-#   scripts/ci.sh            # both stages
+#   scripts/ci.sh            # all stages
 #   scripts/ci.sh fast       # tier-1 only (what the driver runs)
 #   scripts/ci.sh slow       # slow tier only
+#   scripts/ci.sh bench      # benchmarks smoke stage only
 #
 # Deprecation gate: both stages run with DeprecationWarning promoted to
 # an error for warnings ATTRIBUTED to repro.* modules (the legacy
@@ -29,4 +33,11 @@ fi
 if [[ "$stage" == "slow" || "$stage" == "all" ]]; then
     echo "=== stage 2: slow tier ==="
     python -m pytest -q -m slow "${DEPRECATION_GATE[@]}"
+fi
+
+if [[ "$stage" == "bench" || "$stage" == "all" ]]; then
+    echo "=== stage 3: benchmarks smoke (tiny shapes, interpret mode) ==="
+    # (the repro.* deprecation gate lives in the pytest stages; the bench
+    # modules go through the same public API they exercise)
+    python -m benchmarks.run --smoke --json "BENCH_$(date +%Y%m%d).json"
 fi

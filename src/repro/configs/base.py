@@ -115,6 +115,12 @@ class ArchConfig:
     kahan_loss: bool = True       # compensated chunked cross-entropy
     kahan_grad_accum: bool = True
     kahan_optimizer: bool = True
+    # engine-kernel routing (off by default: the Pallas kernels run in
+    # interpret mode off-TPU, so these are precision/validation modes,
+    # not the fast path). The ambient repro.kernels Policy picks the
+    # scheme / blocks / accumulate dtype.
+    kahan_matmul: bool = False    # dense projections via ops.matmul
+    kahan_attention: bool = False  # prefill attention via engine flash
     # dtypes
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"

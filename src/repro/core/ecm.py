@@ -381,46 +381,86 @@ def _scheme(spec) -> "object":
     return spec
 
 
+#: bytes per element for each supported accumulate dtype — kept as a
+#: plain name map so this module never imports jax for metadata.
+_ELEM_BYTES = {"bfloat16": 2, "float32": 4, "float64": 8}
+
+
+def elem_bytes_for_dtype(compute_dtype) -> int:
+    """Element width of a supported ``Policy.compute_dtype`` (name, numpy
+    dtype, numpy/jnp scalar type such as ``jnp.float32``). The machine
+    axis of the precision trade space: halving/doubling the element width
+    moves the bandwidth roofline while the scheme's instruction mix fixes
+    the compute side."""
+    # dtype instances carry .name; scalar TYPES (jnp.float32,
+    # np.float64, ml_dtypes.bfloat16) carry __name__; strings are
+    # themselves. No np.dtype()/jax import: 'bfloat16' only resolves
+    # through numpy once ml_dtypes is registered, and this module stays
+    # importable without jax.
+    name = (getattr(compute_dtype, "name", None)
+            or getattr(compute_dtype, "__name__", None)
+            or str(compute_dtype))
+    try:
+        return _ELEM_BYTES[name]
+    except KeyError:
+        raise ValueError(
+            f"compute_dtype must be one of {sorted(_ELEM_BYTES)}; "
+            f"got {compute_dtype!r}") from None
+
+
 def dot_kernel_for_scheme(scheme: Union[str, object], *, simd: str = "avx",
-                          elem_bytes: int = 4,
+                          elem_bytes: int = 4, compute_dtype=None,
                           name: Optional[str] = None) -> DotKernel:
     """x86 kernel description for a registered scheme: the registry owns
     the adds/muls per scalar iteration, the caller picks the SIMD variant
-    and element width (the machine axis the registry doesn't model)."""
+    and element width (the machine axis the registry doesn't model) —
+    either directly via ``elem_bytes`` or from a ``compute_dtype``."""
     sch = _scheme(scheme)
     mix = sch.instruction_mix
+    if compute_dtype is not None:
+        elem_bytes = elem_bytes_for_dtype(compute_dtype)
     return DotKernel(name or sch.name, adds=mix.adds, muls=mix.muls,
                      loads=2, flops=2, elem_bytes=elem_bytes, simd=simd)
 
 
 def tpu_block_for_scheme(scheme: Union[str, object], *,
                          elems: int = 8 * 1024, elem_bytes: int = 4,
-                         streams: int = 2, sequential: bool = False,
+                         compute_dtype=None, streams: int = 2,
+                         sequential: bool = False,
                          name: Optional[str] = None) -> TPUKernelBlock:
     """TPU VMEM-block description for a registered scheme (executed VPU
-    flops per element = the scheme's instruction-mix total)."""
+    flops per element = the scheme's instruction-mix total; element width
+    from ``elem_bytes`` or a supported ``compute_dtype``)."""
     sch = _scheme(scheme)
+    if compute_dtype is not None:
+        elem_bytes = elem_bytes_for_dtype(compute_dtype)
     return tpu_dot_block(name or sch.name, elems,
                          sch.instruction_mix.flops, elem_bytes, streams,
                          sequential)
 
 
 def registry_dot_kernels(*, simd: str = "avx", elem_bytes: int = 4,
-                         ) -> Dict[str, DotKernel]:
+                         compute_dtype=None) -> Dict[str, DotKernel]:
     """One x86 kernel description per *currently registered* scheme —
     newly registered schemes appear with no edits here."""
     from repro.kernels import schemes as _schemes
 
-    return {n: dot_kernel_for_scheme(s, simd=simd, elem_bytes=elem_bytes)
+    return {n: dot_kernel_for_scheme(s, simd=simd, elem_bytes=elem_bytes,
+                                     compute_dtype=compute_dtype)
             for n, s in _schemes.registered().items()}
 
 
 def registry_tpu_blocks(*, elems: int = 8 * 1024, elem_bytes: int = 4,
-                        ) -> Dict[str, TPUKernelBlock]:
-    """One TPU block description per *currently registered* scheme."""
+                        compute_dtype=None) -> Dict[str, TPUKernelBlock]:
+    """One TPU block description per *currently registered* scheme.
+
+    Passing ``compute_dtype`` produces the table for that accumulate
+    dtype (bf16 halves, f64 doubles the streamed bytes per element) —
+    the model-side view of the ``Policy.compute_dtype`` axis."""
     from repro.kernels import schemes as _schemes
 
-    return {n: tpu_block_for_scheme(s, elems=elems, elem_bytes=elem_bytes)
+    return {n: tpu_block_for_scheme(s, elems=elems, elem_bytes=elem_bytes,
+                                    compute_dtype=compute_dtype)
             for n, s in _schemes.registered().items()}
 
 

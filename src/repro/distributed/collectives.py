@@ -11,6 +11,12 @@ in launch/train.py). What lives here is the *explicitly managed* layer:
   deterministic two-sum tree (``engine.merge_accumulators``, device-major
   order) collapses them — never a plain ``psum``, whose reduction order
   the backend may re-associate run to run.
+* ``sharded_matmul`` — the grid-shaped member of that family: the K
+  (contraction) axis is sharded, each device runs the engine's matmul
+  kernel over its K-slice and emits per-device ``(s, c)`` OUTPUT-TILE
+  grids, which are all-gathered and folded device-major through the same
+  two-sum tree (``engine.merge_accumulator_grids`` — elementwise over
+  the [M, N] tile) — again, never a ``psum``.
 * ``merge_sharded_accumulators`` — that gather-side fold, exposed
   separately so tests can check it against the single-device merge on
   identical data.
@@ -39,6 +45,7 @@ from repro.kernels.engine import (
     Accumulator,
     CompensatedReduction,
     SchemeSpec,
+    merge_accumulator_grids,
     merge_accumulators,
 )
 
@@ -75,20 +82,22 @@ def _sharded_reduce(axis: str, local_accumulate):
 
 def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
                  scheme: SchemeSpec = None, unroll: Optional[int] = None,
-                 interpret: Optional[bool] = None,
+                 interpret: Optional[bool] = None, compute_dtype=None,
                  mode: Optional[str] = None) -> jax.Array:
     """Compensated sum of an array sharded over one mesh axis.
 
     Per-device: the engine's Pallas sum kernel over the local shard.
     Cross-device: all-gather of the (s, c) grids + the deterministic
-    two-sum tree — NOT a psum. Returns a replicated fp32 scalar that is
-    bitwise reproducible for a fixed mesh size. ``scheme`` is any
+    two-sum tree — NOT a psum. Returns a replicated compute-dtype scalar
+    that is bitwise reproducible for a fixed mesh size. ``scheme`` is any
     registered compensation scheme / a Policy (None -> ambient policy);
-    ``mode=`` is the deprecated alias.
+    ``compute_dtype`` overrides the policy's accumulate dtype; ``mode=``
+    is the deprecated alias.
     """
     scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, unroll=unroll,
-                               interpret=interpret)
+                               interpret=interpret,
+                               compute_dtype=compute_dtype)
     reduce = _sharded_reduce(axis, eng.sum_accumulators)
     return compat.shard_map(reduce, mesh=mesh, in_specs=P(axis),
                             out_specs=P(), check_vma=False)(x)
@@ -97,15 +106,52 @@ def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
 def sharded_dot(mesh: Mesh, a: jax.Array, b: jax.Array, *,
                 axis: str = "data", scheme: SchemeSpec = None,
                 unroll: Optional[int] = None,
-                interpret: Optional[bool] = None,
+                interpret: Optional[bool] = None, compute_dtype=None,
                 mode: Optional[str] = None) -> jax.Array:
     """Compensated dot of two identically-sharded 1-D arrays (see
     ``sharded_asum`` for the merge and scheme-resolution semantics)."""
     scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, unroll=unroll,
-                               interpret=interpret)
+                               interpret=interpret,
+                               compute_dtype=compute_dtype)
     reduce = _sharded_reduce(axis, eng.dot_accumulators)
     return compat.shard_map(reduce, mesh=mesh, in_specs=(P(axis), P(axis)),
+                            out_specs=P(), check_vma=False)(a, b)
+
+
+def sharded_matmul(mesh: Mesh, a: jax.Array, b: jax.Array, *,
+                   axis: str = "data", scheme: SchemeSpec = None,
+                   block_m: Optional[int] = None,
+                   block_n: Optional[int] = None,
+                   block_k: Optional[int] = None,
+                   interpret: Optional[bool] = None, compute_dtype=None,
+                   mode: Optional[str] = None) -> jax.Array:
+    """C = A @ B with the K (contraction) axis sharded over ``axis``.
+
+    ``a``: [M, K] sharded on its second dim; ``b``: [K, N] sharded on its
+    first dim (K must divide by the axis size). Per-device: the engine's
+    matmul kernel over the local K-slice, emitting the raw per-output-tile
+    ``(s, c)`` accumulator grids. Cross-device: all-gather of those grids
+    and a device-major elementwise two-sum tree
+    (``engine.merge_accumulator_grids``) — NEVER a ``psum``, so the
+    result is bitwise reproducible for a fixed mesh size. Returns the
+    replicated [M, N] product in the compute dtype.
+    """
+    scheme = _schemes.resolve_legacy_mode(mode, scheme)
+    eng = CompensatedReduction(scheme=scheme, interpret=interpret,
+                               compute_dtype=compute_dtype)
+    m, n = a.shape[0], b.shape[1]
+
+    def reduce(a_shard, b_shard):
+        acc: Accumulator = eng.matmul_accumulators(
+            a_shard, b_shard, block_m=block_m, block_n=block_n,
+            block_k=block_k)
+        ss = jax.lax.all_gather(acc.s, axis)   # [n_dev, M_pad, N_pad]
+        cs = jax.lax.all_gather(acc.c, axis)
+        return merge_accumulator_grids(ss, cs)[:m, :n]
+
+    return compat.shard_map(reduce, mesh=mesh,
+                            in_specs=(P(None, axis), P(axis, None)),
                             out_specs=P(), check_vma=False)(a, b)
 
 

@@ -14,14 +14,21 @@ package carries the core artifacts:
   kahan_sum.py    — single-stream variant (loss/metric accumulation).
   kahan_matmul.py — MXU matmul with scheme-compensated inter-K-tile
                     accumulation (the TPU analog of the paper's
-                    FMA-as-ADD trick).
+                    FMA-as-ADD trick). Emits the raw (s, c) output-tile
+                    grids; single and batched (batch, mb, nb, ks) grids.
   flash_attention.py — fused flash attention with scheme-compensated
                     online-softmax accumulators (the fix for the dominant
-                    roofline term found in EXPERIMENTS.md §Perf).
+                    roofline term found in EXPERIMENTS.md §Perf). Emits
+                    the raw (l, l_c, acc, acc_c) grids; the shared
+                    flash_block_update body is traced by the kernel AND
+                    the ref oracle (bitwise by construction).
   engine.py       — the unified CompensatedReduction engine: one (s, c)
                     accumulator contract (total = s + c, merge = two-sum
-                    tree), one padding/promotion/blocking policy, batched
-                    (batch, steps) grids with a custom_vmap rule.
+                    tree), one padding/promotion/blocking/compute-dtype
+                    policy (Policy.compute_dtype: fp32 | f64 | bf16
+                    accumulate), batched grids with custom_vmap rules,
+                    and a custom-VJP matmul whose backward reuses the
+                    compensated kernel.
   ops.py          — jit'd public wrappers (interpret on CPU, Mosaic on TPU).
   ref.py          — registry-generic pure-jnp oracles tracing the same
                     scheme callables (bitwise-identical rounding).

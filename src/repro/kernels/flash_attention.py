@@ -20,19 +20,27 @@ compensation-scheme registry (naive / kahan / pairwise / dot2 / custom —
 same menu as the dot kernels); the rescaling by exp(m_old - m) scales
 value AND comp (scaling commutes with compensation up to one rounding).
 
-Layout: inputs [BH, S, dh] (batch*heads flattened by the wrapper); grid
+Engine contract: the kernel EMITS the raw ``(l_s, l_c, acc_s, acc_c)``
+accumulator grids — finalization (``scheme.finalize`` on both pairs, then
+the ``acc / l`` division) happens in ``CompensatedReduction``, which also
+owns Sq/Skv padding, compute-dtype promotion, and interpret resolution.
+The public ``flash_attention`` below is a thin policy-resolving veneer
+over the engine; ``kernels.ref.flash_attention_ref`` traces the SAME
+scheme callables block-for-block, so kernel-vs-oracle equality is bitwise.
+
+Layout: inputs [BH, S, dh] (batch*heads flattened by the caller); grid
 (BH, q_blocks, k_blocks), k innermost ("arbitrary"); per-(bh, q-block)
 scratch in VMEM: m, l, l_c, acc, acc_c. Causal masking from block
-coordinates; rows whose blocks are entirely masked are skipped by
-construction (upper-triangular k-blocks still execute but contribute
-exp(-inf)=0 — acceptable for the validation kernel; a production variant
-would prune the grid).
+coordinates; ``kv_len`` masks engine-padded key positions (so non-causal
+inputs may be padded too). Rows whose blocks are entirely masked still
+execute but contribute exp(-inf)=0 — acceptable for the validation
+kernel; a production variant would prune the grid.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +53,83 @@ from repro.kernels.schemes import CompensationScheme
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, lc_scr,
-                  acc_scr, accc_scr, *, scheme: CompensationScheme,
-                  causal: bool, block_q: int, block_k: int, k_steps: int,
-                  scale: float):
+def rowsum_tree(p: jax.Array) -> jax.Array:
+    """Deterministic row-sum: [bq, bk] -> [bq, 1] by a power-of-two
+    pairwise tree of ELEMENTWISE adds.
+
+    ``jnp.sum`` (and even a dot-against-ones, which XLA's simplifier
+    rewrites back into a reduce) may fuse/vectorize with a different
+    association order depending on the surrounding computation, breaking
+    the kernel-vs-oracle bitwise contract. Slice-and-add is elementwise
+    only, so every tracing context executes the identical rounding
+    sequence. Shared by ``_flash_kernel`` and ``ref.flash_attention_ref``.
+    """
+    n = p.shape[-1]
+    p2 = 1 << (n - 1).bit_length()
+    if p2 != n:
+        p = jnp.pad(p, ((0, 0), (0, p2 - n)))
+    while p.shape[-1] > 1:
+        half = p.shape[-1] // 2
+        p = p[:, :half] + p[:, half:]
+    return p
+
+
+def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
+                       l_s, l_c, a_s, a_c, *, qb, kb, step, block_q: int,
+                       block_k: int, kv_len: int, causal: bool,
+                       scale: float, compute_dtype=jnp.float32):
+    """ONE k-block fold of the online-softmax state — the shared body.
+
+    Traced by BOTH the Pallas kernel (block refs) and the jnp oracle
+    (array slices), exactly like the scheme callables are shared by the
+    dot kernels and their oracles — kernel-vs-oracle bitwise equality by
+    construction. Every fusion-sensitive op (dot, mul, reduce, exp,
+    select) is pinned behind ``lax.optimization_barrier``: XLA CPU
+    contracts mul+add chains into FMAs, inlines exp into consumer loops
+    with a different rounding path, and rematerializes producers across
+    fusion boundaries — all decisions that vary with the surrounding
+    program and would otherwise let the same math round differently in
+    the kernel and the oracle.
+
+    Inputs are one block each: q [bq, dh]; k/v [bk, dh]; running stats
+    m_old/l/l_c [bq, 1], a/a_c [bq, dh]. Returns the updated
+    (m, l_s, l_c, a_s, a_c).
+    """
+    barrier = jax.lax.optimization_barrier
+    s = barrier(jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=compute_dtype))
+    s = barrier(s * scale)
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = k_pos < kv_len                       # engine-padded keys
+    if causal:
+        valid = valid & (q_pos >= k_pos)
+    s = barrier(jnp.where(valid, s, NEG_INF))
+    m_new = barrier(jnp.maximum(m_old, barrier(
+        jnp.max(s, axis=-1, keepdims=True))))
+    corr = barrier(jnp.exp(barrier(m_old - m_new)))   # [bq, 1]
+    p = barrier(jnp.exp(barrier(s - m_new)))          # [bq, bk]
+    p_sum = barrier(rowsum_tree(p))
+    pv = barrier(jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=compute_dtype))
+    # rescale value AND comp, then fold this k-block's contribution
+    # through the scheme's accumulator update.
+    ls_r = barrier(l_s * corr)
+    lc_r = barrier(l_c * corr)
+    as_r = barrier(a_s * corr)
+    ac_r = barrier(a_c * corr)
+    l_s, l_c = scheme.update(ls_r, lc_r, p_sum, step)
+    a_s, a_c = scheme.update(as_r, ac_r, pv, step)
+    return m_new, l_s, l_c, a_s, a_c
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, ls_out, lc_out, as_out, ac_out,
+                  m_scr, l_scr, lc_scr, acc_scr, accc_scr, *,
+                  scheme: CompensationScheme, causal: bool, block_q: int,
+                  block_k: int, k_steps: int, kv_len: int, scale: float,
+                  compute_dtype=jnp.float32):
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -59,52 +140,44 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, lc_scr,
         acc_scr[...] = jnp.zeros_like(acc_scr)
         accc_scr[...] = jnp.zeros_like(accc_scr)
 
-    q = q_ref[0].astype(jnp.float32)            # [bq, dh]
-    k = k_ref[0].astype(jnp.float32)            # [bk, dh]
-    v = v_ref[0].astype(jnp.float32)
+    q = q_ref[0].astype(compute_dtype)          # [bq, dh]
+    k = k_ref[0].astype(compute_dtype)          # [bk, dh]
+    v = v_ref[0].astype(compute_dtype)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if causal:
-        qb = pl.program_id(1)
-        q_pos = qb * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 0)
-        k_pos = kb * block_k + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_k), 1)
-        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
-
-    m_old = m_scr[...]                           # [bq, 1]
-    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
-    corr = jnp.exp(m_old - m_new)                # [bq, 1]
-    p = jnp.exp(s - m_new)                       # [bq, bk]
-    p_sum = jnp.sum(p, axis=-1, keepdims=True)
-    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-
-    # rescale value AND comp, then fold this k-block's contribution
-    # through the scheme's accumulator update.
-    l_s, l_c = scheme.update(l_scr[...] * corr, lc_scr[...] * corr,
-                             p_sum, kb)
+    m_new, l_s, l_c, a_s, a_c = flash_block_update(
+        scheme, q, k, v, m_scr[...], l_scr[...], lc_scr[...],
+        acc_scr[...], accc_scr[...], qb=pl.program_id(1), kb=kb, step=kb,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, causal=causal,
+        scale=scale, compute_dtype=compute_dtype)
     l_scr[...] = l_s
     lc_scr[...] = l_c
-    a_s, a_c = scheme.update(acc_scr[...] * corr, accc_scr[...] * corr,
-                             pv, kb)
     acc_scr[...] = a_s
     accc_scr[...] = a_c
     m_scr[...] = m_new
 
     @pl.when(kb == k_steps - 1)
     def _emit():
-        l_tot = scheme.finalize(l_scr[...], lc_scr[...])
-        acc_tot = scheme.finalize(acc_scr[...], accc_scr[...])
-        o_ref[0] = (acc_tot / jnp.maximum(l_tot, 1e-30)).astype(o_ref.dtype)
+        ls_out[0] = l_scr[...]
+        lc_out[0] = lc_scr[...]
+        as_out[0] = acc_scr[...]
+        ac_out[0] = accc_scr[...]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_q", "block_k", "scheme", "causal", "interpret"))
-def _flash_attention_impl(q, k, v, *, block_q, block_k,
-                          scheme: CompensationScheme, causal, interpret):
+    static_argnames=("block_q", "block_k", "scheme", "causal", "kv_len",
+                     "interpret", "compute_dtype"))
+def flash_accumulators(q, k, v, *, block_q, block_k,
+                       scheme: CompensationScheme, causal, kv_len,
+                       interpret, compute_dtype=jnp.float32,
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Run the flash grid; returns the raw (l_s, l_c, acc_s, acc_c) grids.
+
+    ``q``: [BH, Sq, dh]; ``k``/``v``: [BH, Skv, dh], already promoted to
+    ``compute_dtype`` and padded to block multiples by the engine.
+    ``kv_len`` is the un-padded key count (padded keys are masked).
+    l grids are [BH, Sq, 1]; acc grids [BH, Sq, dh].
+    """
     bh, sq, dh = q.shape
     _, skv, _ = k.shape
     assert sq % block_q == 0 and skv % block_k == 0
@@ -113,7 +186,8 @@ def _flash_attention_impl(q, k, v, *, block_q, block_k,
 
     kernel = functools.partial(
         _flash_kernel, scheme=scheme, causal=causal, block_q=block_q,
-        block_k=block_k, k_steps=grid[2], scale=scale)
+        block_k=block_k, k_steps=grid[2], kv_len=kv_len, scale=scale,
+        compute_dtype=compute_dtype)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -122,14 +196,24 @@ def _flash_attention_impl(q, k, v, *, block_q, block_k,
             pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, 1), compute_dtype),
+            jax.ShapeDtypeStruct((bh, sq, 1), compute_dtype),
+            jax.ShapeDtypeStruct((bh, sq, dh), compute_dtype),
+            jax.ShapeDtypeStruct((bh, sq, dh), compute_dtype),
+        ],
         scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),    # m
-            pltpu.VMEM((block_q, 1), jnp.float32),    # l
-            pltpu.VMEM((block_q, 1), jnp.float32),    # l comp
-            pltpu.VMEM((block_q, dh), jnp.float32),   # acc
-            pltpu.VMEM((block_q, dh), jnp.float32),   # acc comp
+            pltpu.VMEM((block_q, 1), compute_dtype),    # m
+            pltpu.VMEM((block_q, 1), compute_dtype),    # l
+            pltpu.VMEM((block_q, 1), compute_dtype),    # l comp
+            pltpu.VMEM((block_q, dh), compute_dtype),   # acc
+            pltpu.VMEM((block_q, dh), compute_dtype),   # acc comp
         ],
         interpret=interpret,
     )(q, k, v)
@@ -138,18 +222,21 @@ def _flash_attention_impl(q, k, v, *, block_q, block_k,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 256, block_k: int = 256,
                     scheme: Union[str, CompensationScheme, None] = None,
-                    causal: bool = True, interpret: bool = True,
+                    causal: bool = True, interpret: Optional[bool] = None,
                     mode: Optional[str] = None) -> jax.Array:
-    """q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. Returns [BH, Sq, dh] fp32.
+    """q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. Returns [BH, Sq, dh] in the
+    engine's compute dtype.
 
-    ``scheme``: registered scheme name / CompensationScheme / None (None
-    resolves the ambient ``use_policy`` default). ``mode=`` is the
-    deprecated alias. Caller pads Sq/Skv to block multiples (zero-pad
-    keys are masked by the causal test when causal=True; for non-causal
-    use exact multiples).
+    Thin veneer over ``CompensatedReduction.flash_attention``: the engine
+    owns padding (Sq/Skv to block multiples; padded keys masked),
+    compute-dtype promotion, interpret resolution, and finalization of the
+    (l, acc) accumulator pairs. ``scheme``: registered scheme name /
+    CompensationScheme / Policy / None (None resolves the ambient
+    ``use_policy`` default). ``mode=`` is the deprecated alias.
     """
+    from repro.kernels.engine import CompensatedReduction
+
     scheme = _schemes.resolve_legacy_mode(mode, scheme)
-    scheme = _schemes.resolve_scheme(scheme)
-    return _flash_attention_impl(q, k, v, block_q=block_q, block_k=block_k,
-                                 scheme=scheme, causal=causal,
-                                 interpret=interpret)
+    eng = CompensatedReduction(scheme=scheme, interpret=interpret)
+    return eng.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                               causal=causal)

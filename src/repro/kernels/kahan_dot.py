@@ -39,7 +39,7 @@ SUBLANES = 8
 
 def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *,
                 scheme: CompensationScheme, grid_steps: int,
-                step_dim: int = 0):
+                compute_dtype=jnp.float32, step_dim: int = 0):
     """Shared body for the single grid (steps,) and the batched grid
     (batch, steps). Batched block refs carry a leading length-1 batch dim;
     the reshape to the scratch shape strips/restores it. ``step_dim``
@@ -51,8 +51,8 @@ def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *,
         s_acc[...] = jnp.zeros_like(s_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    a = a_ref[...].reshape(s_acc.shape).astype(jnp.float32)
-    b = b_ref[...].reshape(s_acc.shape).astype(jnp.float32)
+    a = a_ref[...].reshape(s_acc.shape).astype(compute_dtype)
+    b = b_ref[...].reshape(s_acc.shape).astype(compute_dtype)
     s, c = scheme.mul_update(s_acc[...], c_acc[...], a, b, g)
     s_acc[...] = s
     c_acc[...] = c
@@ -63,15 +63,19 @@ def _dot_kernel(a_ref, b_ref, s_out, c_out, s_acc, c_acc, *,
         c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret",
+                                             "compute_dtype"))
 def dot_accumulators(a: jax.Array, b: jax.Array, *,
                      scheme: CompensationScheme, unroll: int = 8,
-                     interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                     interpret: bool = True,
+                     compute_dtype=jnp.float32,
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Run the blocked dot kernel; returns (s, c) accumulator grids.
 
     ``a``/``b`` must already be 1-D of equal length, padded by the caller to
     a multiple of ``8 * unroll * 128``. ``scheme`` is a (hashable, static)
     ``CompensationScheme`` — callers resolve names through the registry.
+    ``compute_dtype`` is the accumulate dtype (engine-validated).
     """
     rows = SUBLANES * unroll
     n = a.shape[0]
@@ -80,7 +84,8 @@ def dot_accumulators(a: jax.Array, b: jax.Array, *,
     a2 = a.reshape(steps * rows, LANES)
     b2 = b.reshape(steps * rows, LANES)
 
-    kernel = functools.partial(_dot_kernel, scheme=scheme, grid_steps=steps)
+    kernel = functools.partial(_dot_kernel, scheme=scheme, grid_steps=steps,
+                               compute_dtype=compute_dtype)
     s, c = pl.pallas_call(
         kernel,
         grid=(steps,),
@@ -93,22 +98,24 @@ def dot_accumulators(a: jax.Array, b: jax.Array, *,
             pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), compute_dtype),
+            jax.ShapeDtypeStruct((rows, LANES), compute_dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((rows, LANES), jnp.float32),
-            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), compute_dtype),
+            pltpu.VMEM((rows, LANES), compute_dtype),
         ],
         interpret=interpret,
     )(a2, b2)
     return s, c
 
 
-@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret",
+                                             "compute_dtype"))
 def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
                              scheme: CompensationScheme, unroll: int = 8,
                              interpret: bool = True,
+                             compute_dtype=jnp.float32,
                              ) -> Tuple[jax.Array, jax.Array]:
     """Batched dot kernel: one (batch, steps) Pallas grid.
 
@@ -128,7 +135,7 @@ def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
     b3 = b.reshape(batch, steps * rows, LANES)
 
     kernel = functools.partial(_dot_kernel, scheme=scheme, grid_steps=steps,
-                               step_dim=1)
+                               compute_dtype=compute_dtype, step_dim=1)
     s, c = pl.pallas_call(
         kernel,
         grid=(batch, steps),
@@ -141,12 +148,12 @@ def dot_accumulators_batched(a: jax.Array, b: jax.Array, *,
             pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((batch, rows, LANES), compute_dtype),
+            jax.ShapeDtypeStruct((batch, rows, LANES), compute_dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((rows, LANES), jnp.float32),
-            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), compute_dtype),
+            pltpu.VMEM((rows, LANES), compute_dtype),
         ],
         interpret=interpret,
     )(a3, b3)

@@ -24,7 +24,7 @@ from repro.kernels.schemes import CompensationScheme
 
 def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *,
                 scheme: CompensationScheme, grid_steps: int,
-                step_dim: int = 0):
+                compute_dtype=jnp.float32, step_dim: int = 0):
     """Shared body for the single (steps,) and batched (batch, steps)
     grids — see ``kahan_dot._dot_kernel`` for the reshape convention."""
     g = pl.program_id(step_dim)
@@ -34,7 +34,7 @@ def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *,
         s_acc[...] = jnp.zeros_like(s_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    x = x_ref[...].reshape(s_acc.shape).astype(jnp.float32)
+    x = x_ref[...].reshape(s_acc.shape).astype(compute_dtype)
     s, c = scheme.update(s_acc[...], c_acc[...], x, g)
     s_acc[...] = s
     c_acc[...] = c
@@ -45,10 +45,12 @@ def _sum_kernel(x_ref, s_out, c_out, s_acc, c_acc, *,
         c_out[...] = c_acc[...].reshape(c_out.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret",
+                                             "compute_dtype"))
 def sum_accumulators(x: jax.Array, *, scheme: CompensationScheme,
-                     unroll: int = 8,
-                     interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+                     unroll: int = 8, interpret: bool = True,
+                     compute_dtype=jnp.float32,
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Run the blocked sum kernel; returns (s, c) accumulator grids."""
     rows = SUBLANES * unroll
     n = x.shape[0]
@@ -56,7 +58,8 @@ def sum_accumulators(x: jax.Array, *, scheme: CompensationScheme,
     steps = n // (rows * LANES)
     x2 = x.reshape(steps * rows, LANES)
 
-    kernel = functools.partial(_sum_kernel, scheme=scheme, grid_steps=steps)
+    kernel = functools.partial(_sum_kernel, scheme=scheme, grid_steps=steps,
+                               compute_dtype=compute_dtype)
     s, c = pl.pallas_call(
         kernel,
         grid=(steps,),
@@ -66,21 +69,23 @@ def sum_accumulators(x: jax.Array, *, scheme: CompensationScheme,
             pl.BlockSpec((rows, LANES), lambda g: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANES), compute_dtype),
+            jax.ShapeDtypeStruct((rows, LANES), compute_dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((rows, LANES), jnp.float32),
-            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), compute_dtype),
+            pltpu.VMEM((rows, LANES), compute_dtype),
         ],
         interpret=interpret,
     )(x2)
     return s, c
 
 
-@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scheme", "unroll", "interpret",
+                                             "compute_dtype"))
 def sum_accumulators_batched(x: jax.Array, *, scheme: CompensationScheme,
                              unroll: int = 8, interpret: bool = True,
+                             compute_dtype=jnp.float32,
                              ) -> Tuple[jax.Array, jax.Array]:
     """Batched sum kernel: one (batch, steps) Pallas grid.
 
@@ -96,7 +101,7 @@ def sum_accumulators_batched(x: jax.Array, *, scheme: CompensationScheme,
     x3 = x.reshape(batch, steps * rows, LANES)
 
     kernel = functools.partial(_sum_kernel, scheme=scheme, grid_steps=steps,
-                               step_dim=1)
+                               compute_dtype=compute_dtype, step_dim=1)
     s, c = pl.pallas_call(
         kernel,
         grid=(batch, steps),
@@ -106,12 +111,12 @@ def sum_accumulators_batched(x: jax.Array, *, scheme: CompensationScheme,
             pl.BlockSpec((1, rows, LANES), lambda bi, g: (bi, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
-            jax.ShapeDtypeStruct((batch, rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((batch, rows, LANES), compute_dtype),
+            jax.ShapeDtypeStruct((batch, rows, LANES), compute_dtype),
         ],
         scratch_shapes=[
-            pltpu.VMEM((rows, LANES), jnp.float32),
-            pltpu.VMEM((rows, LANES), jnp.float32),
+            pltpu.VMEM((rows, LANES), compute_dtype),
+            pltpu.VMEM((rows, LANES), compute_dtype),
         ],
         interpret=interpret,
     )(x3)

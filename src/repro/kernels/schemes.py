@@ -69,8 +69,47 @@ UpdateFn = Callable[[Array, Array, Array, Array], Tuple[Array, Array]]
 # where the product's rounding error matters (dot2's TwoProd).
 MulUpdateFn = Callable[[Array, Array, Array, Array, Array], Tuple[Array, Array]]
 
-#: fp32 unit roundoff, the default for ``error_bound`` (kernels compute fp32).
+#: fp32 unit roundoff, the default for ``error_bound`` (kernels compute fp32
+#: unless the Policy selects another accumulate dtype).
 EPS32 = 2.0 ** -24
+#: f64 unit roundoff (``compute_dtype="float64"`` accumulate path).
+EPS64 = 2.0 ** -53
+#: bf16 unit roundoff (``compute_dtype="bfloat16"`` accumulate path).
+EPS_BF16 = 2.0 ** -8
+
+#: accumulate dtypes the kernel bodies support; anything else fails fast
+#: at the Policy / engine boundary, never inside a trace.
+SUPPORTED_COMPUTE_DTYPES = ("bfloat16", "float32", "float64")
+
+_EPS_BY_NAME = {"bfloat16": EPS_BF16, "float32": EPS32, "float64": EPS64}
+
+
+def unit_roundoff(compute_dtype) -> float:
+    """Unit roundoff of a supported accumulate dtype (for ``error_bound``)."""
+    return _EPS_BY_NAME[resolve_compute_dtype(compute_dtype).name]
+
+
+def resolve_compute_dtype(spec):
+    """Normalize/validate an accumulate-dtype spec -> ``jnp.dtype``.
+
+    None resolves the ambient policy's ``compute_dtype``. Unsupported
+    dtypes FAIL FAST with the supported menu; float64 additionally
+    requires x64 to be enabled (otherwise jax silently truncates every
+    array to fp32 and the "f64 accumulate" would be a lie).
+    """
+    if spec is None:
+        return current_policy().compute_dtype  # already validated by Policy
+    dt = jnp.dtype(spec)
+    if dt.name not in SUPPORTED_COMPUTE_DTYPES:
+        raise ValueError(
+            f"compute_dtype must be one of {list(SUPPORTED_COMPUTE_DTYPES)}; "
+            f"got {dt.name!r}")
+    if dt == jnp.dtype("float64") and not jax.config.jax_enable_x64:
+        raise ValueError(
+            "compute_dtype='float64' requires x64 mode (enable it with "
+            "jax.config.update('jax_enable_x64', True) or the "
+            "jax.experimental.enable_x64() context manager)")
+    return dt
 
 #: pairwise cascade interval: the primary accumulator folds into the
 #: secondary every FOLD sequential steps, bounding per-cell error growth
@@ -303,8 +342,10 @@ class Policy:
     unroll         accumulator-group count U; 1-D kernel block is (8*U, 128)
     blocks         matmul (block_m, block_n, block_k) tile sizes
     interpret      None -> engine.resolve_interpret (Mosaic only on TPU)
-    compute_dtype  accumulator dtype; the Pallas kernels are fp32-only
-                   today, so anything else fails fast at construction
+    compute_dtype  accumulate dtype for every kernel body and oracle:
+                   "float32" (default) | "float64" (needs x64 enabled) |
+                   "bfloat16" (the bf16-accumulate trade-space axis).
+                   Anything else fails fast at construction.
 
     Resolution: explicit kwargs at a call site > the call's Policy >
     the ambient ``use_policy`` default.
@@ -320,10 +361,10 @@ class Policy:
         # fail fast at the boundary: bad scheme names and unsupported
         # compute dtypes never reach a kernel trace.
         object.__setattr__(self, "scheme", resolve_scheme(self.scheme))
-        if jnp.dtype(self.compute_dtype) != jnp.dtype(jnp.float32):
-            raise ValueError(
-                "Policy.compute_dtype: the Pallas kernels accumulate in "
-                f"float32 only (got {jnp.dtype(self.compute_dtype)!r})")
+        object.__setattr__(
+            self, "compute_dtype", resolve_compute_dtype(
+                jnp.float32 if self.compute_dtype is None
+                else self.compute_dtype))
         if self.unroll < 1:
             raise ValueError(f"Policy.unroll must be >= 1, got {self.unroll}")
 

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         [--batch 4] [--new-tokens 32] [--stats] [--scheme kahan] \
-        [--unroll 8]
+        [--unroll 8] [--compute-dtype float32]
 
 ``--stats`` turns on the compensated telemetry path: per-request squared
 logit norms computed with the engine's batched (batch, steps) Pallas grid
@@ -43,9 +43,14 @@ def main():
                          "names fail fast with the menu)")
     ap.add_argument("--unroll", type=int, default=8,
                     help="accumulator-group count of the Pallas kernels")
+    ap.add_argument("--compute-dtype", default="float32",
+                    help="accumulate dtype for the compensated kernels "
+                         "(float32 | bfloat16 | float64 — f64 needs x64; "
+                         "unsupported dtypes fail fast with the menu)")
     args = ap.parse_args()
 
-    policy = Policy(scheme=args.scheme, unroll=args.unroll)
+    policy = Policy(scheme=args.scheme, unroll=args.unroll,
+                    compute_dtype=args.compute_dtype)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     server = Server(cfg, ServeConfig(temperature=args.temperature,
                                      track_stats=args.stats,

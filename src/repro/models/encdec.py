@@ -44,7 +44,9 @@ class EncDecLM:
         self.cfg = cfg
         self.st = AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                              cfg.rope_theta, cfg.qkv_bias,
-                             _dtype(cfg.compute_dtype))
+                             _dtype(cfg.compute_dtype),
+                             kahan_matmul=cfg.kahan_matmul,
+                             kahan_attention=cfg.kahan_attention)
 
     # ------------------------------------------------------------------ init
     def _enc_block_init(self):

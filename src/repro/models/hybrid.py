@@ -73,7 +73,9 @@ class HymbaLM:
         self.cfg = cfg
         self.st = AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                              cfg.rope_theta, cfg.qkv_bias,
-                             _dtype(cfg.compute_dtype))
+                             _dtype(cfg.compute_dtype),
+                             kahan_matmul=cfg.kahan_matmul,
+                             kahan_attention=cfg.kahan_attention)
         self.segments = plan_hymba_segments(cfg)
 
     def _block_init(self):

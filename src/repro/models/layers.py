@@ -60,15 +60,29 @@ def dense_init(key, d_in: int, d_out, *, dtype, bias: bool = False,
     return p, s
 
 
-def dense(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+def dense(p: Params, x: jax.Array, compute_dtype, *,
+          compensated: bool = False) -> jax.Array:
+    """Dense projection. With ``compensated=True`` (ArchConfig
+    ``kahan_matmul``) the contraction routes through the engine's
+    compensated matmul (``ops.matmul`` — custom-VJP, so training
+    gradients also accumulate compensated); scheme / blocks / accumulate
+    dtype come from the ambient ``repro.kernels`` Policy."""
     w = p["w"].astype(compute_dtype)
-    n_out = w.ndim - 1
-    y = jax.lax.dot_general(
-        x.astype(compute_dtype), w,
-        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
+    if compensated:
+        from repro.kernels import ops as _ops
+
+        lead = x.shape[:-1]
+        out_dims = w.shape[1:]
+        x2 = x.astype(compute_dtype).reshape(-1, x.shape[-1])
+        w2 = w.reshape(w.shape[0], -1)
+        y = _ops.matmul(x2, w2).astype(compute_dtype)
+        y = y.reshape(*lead, *out_dims)
+    else:
+        y = jax.lax.dot_general(
+            x.astype(compute_dtype), w,
+            dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
     if "b" in p:
         y = y + p["b"].astype(compute_dtype)
-    del n_out
     return y
 
 
@@ -138,6 +152,9 @@ class AttnStatic:
     theta: float
     qkv_bias: bool
     compute_dtype: Any
+    # engine-kernel routing (ArchConfig.kahan_matmul / kahan_attention)
+    kahan_matmul: bool = False
+    kahan_attention: bool = False
 
 
 def attn_init(key, cfg: ArchConfig, *, cross: bool = False) -> Tuple[Params, Params]:
@@ -178,6 +195,37 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window: int,
 # default q-chunk for the flash-style attention core; bounds the transient
 # fp32 score tensor to [B, H, Q_CHUNK, S_kv] per scan step.
 ATTN_Q_CHUNK = 512
+
+
+def _flash_core(qg: jax.Array, k: jax.Array, v: jax.Array,
+                compute_dtype) -> jax.Array:
+    """Grouped-query attention through the engine's fused flash kernel.
+
+    qg: [B, Sq, KV, G, dh]; k/v: [B, Skv, KV, dh]. KV heads broadcast
+    across the G query groups and (batch, heads) flatten into the
+    kernel's leading BH grid dimension — the batched entry point. The
+    engine owns padding / promotion / the compensated online-softmax
+    accumulators (ambient Policy selects scheme + accumulate dtype).
+    Causal, full-window only — callers guard.
+
+    NOTE: the broadcast materializes G copies of K/V (G = query groups
+    per KV head) — acceptable for the validation/telemetry routing this
+    knob serves, but a production GQA path should instead map the
+    kernel's k/v BlockSpec index with ``bh // G`` so duplication never
+    leaves the index map (ROADMAP: flash backward + GQA index map).
+    """
+    from repro.kernels.flash_attention import flash_attention as _flash
+
+    b, sq, kvh, g, dh = qg.shape
+    skv = k.shape[1]
+    qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, sq, dh)
+    kf = jnp.broadcast_to(k[:, :, :, None, :], (b, skv, kvh, g, dh))
+    kf = kf.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, skv, dh)
+    vf = jnp.broadcast_to(v[:, :, :, None, :], (b, skv, kvh, g, dh))
+    vf = vf.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, skv, dh)
+    out = _flash(qf, kf, vf, causal=True)
+    out = out.reshape(b, kvh, g, sq, dh).transpose(0, 3, 1, 2, 4)
+    return out.astype(compute_dtype)
 
 
 def _attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
@@ -257,10 +305,11 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
     """
     cd = st.compute_dtype
     b, s, _ = x.shape
-    q = dense(p["q"], x, cd)                       # [B,S,H,dh] fused proj
+    cmp = st.kahan_matmul                          # engine-matmul routing
+    q = dense(p["q"], x, cd, compensated=cmp)      # [B,S,H,dh] fused proj
     if cross_kv is None:
-        k = dense(p["k"], x, cd)                   # [B,S,KV,dh]
-        v = dense(p["v"], x, cd)
+        k = dense(p["k"], x, cd, compensated=cmp)  # [B,S,KV,dh]
+        v = dense(p["v"], x, cd, compensated=cmp)
         q = rope_apply(q, q_pos, st.theta)
         k = rope_apply(k, q_pos, st.theta)
     else:
@@ -327,12 +376,20 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
         # cache present -> prefill (chunked); cache None -> training (SP
         # bounds the score slab; see _attn_core docstring)
         k_pos = jnp.arange(s_kv)
-        out = _attn_core(qg, k, v, q_pos, k_pos, causal=causal,
-                         window=window, compute_dtype=cd,
-                         chunked=cache is not None)
+        if (st.kahan_attention and cache is not None and causal
+                and window <= 0 and not ring and s == s_kv):
+            # PREFILL through the engine's fused flash kernel with
+            # compensated online-softmax accumulators. Training stays on
+            # _attn_core (the Pallas kernel has no transpose rule — its
+            # backward would need a flash-bwd kernel).
+            out = _flash_core(qg, k, v, cd)
+        else:
+            out = _attn_core(qg, k, v, q_pos, k_pos, causal=causal,
+                             window=window, compute_dtype=cd,
+                             chunked=cache is not None)
 
     out = out.reshape(b, s, -1)
-    out = dense(p["o"], out, cd)
+    out = dense(p["o"], out, cd, compensated=cmp)
     return out, new_cache
 
 
@@ -381,14 +438,15 @@ def mla_attention(p: Params, cfg: ArchConfig, x: jax.Array, *,
     b, s, _ = x.shape
     h = cfg.n_heads
     scale_dim = m.qk_nope_dim + m.qk_rope_dim
+    cmp = cfg.kahan_matmul                         # engine-matmul routing
 
-    q = dense(p["q"], x, cd)                                  # [B,S,H,nope+rope]
+    q = dense(p["q"], x, cd, compensated=cmp)                 # [B,S,H,nope+rope]
     q_nope = q[..., :m.qk_nope_dim]
     q_rope = rope_apply(q[..., m.qk_nope_dim:], q_pos, cfg.rope_theta)
 
-    c_kv = dense(p["dkv"], x, cd)                             # [B,S,r]
+    c_kv = dense(p["dkv"], x, cd, compensated=cmp)            # [B,S,r]
     c_kv = norm_apply(p["kv_norm"], c_kv, "rmsnorm")
-    k_rope = dense(p["kr"], x, cd)[:, :, None, :]             # [B,S,1,dr]
+    k_rope = dense(p["kr"], x, cd, compensated=cmp)[:, :, None, :]  # [B,S,1,dr]
     k_rope = rope_apply(k_rope, q_pos, cfg.rope_theta)[:, :, 0, :]
 
     decode = cache is not None and s == 1
@@ -467,7 +525,8 @@ def mla_attention(p: Params, cfg: ArchConfig, x: jax.Array, *,
             ctx = outs.swapaxes(0, 1).reshape(b, nch * chunk, h,
                                               m.v_head_dim)[:, :s]
 
-    out = dense(p["o"], ctx.reshape(b, s, h * m.v_head_dim), cd)
+    out = dense(p["o"], ctx.reshape(b, s, h * m.v_head_dim), cd,
+                compensated=cmp)
     return out, cache
 
 
@@ -501,12 +560,15 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None,
 
 def mlp_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
     cd = _dtype(cfg.compute_dtype)
+    cmp = cfg.kahan_matmul                         # engine-matmul routing
     if cfg.mlp == "swiglu":
-        g = jax.nn.silu(dense(p["gate"], x, cd).astype(jnp.float32)).astype(cd)
-        u = dense(p["up"], x, cd)
-        return dense(p["down"], g * u, cd)
-    h = jax.nn.gelu(dense(p["up"], x, cd).astype(jnp.float32)).astype(cd)
-    return dense(p["down"], h, cd)
+        g = jax.nn.silu(dense(p["gate"], x, cd, compensated=cmp)
+                        .astype(jnp.float32)).astype(cd)
+        u = dense(p["up"], x, cd, compensated=cmp)
+        return dense(p["down"], g * u, cd, compensated=cmp)
+    h = jax.nn.gelu(dense(p["up"], x, cd, compensated=cmp)
+                    .astype(jnp.float32)).astype(cd)
+    return dense(p["down"], h, cd, compensated=cmp)
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,9 @@ class ServeConfig:
     temperature: float = 0.0     # 0 = greedy
     track_stats: bool = False    # compensated per-request logit telemetry
     # ONE policy object for every compensated reduction the server runs
-    # (telemetry norms today; compensated logit matmuls when they land).
+    # (telemetry norms here; with ``ArchConfig.kahan_matmul`` /
+    # ``kahan_attention`` the model's own projections and prefill
+    # attention also resolve through the ambient policy).
     # None -> the ambient ``repro.kernels.use_policy`` default.
     policy: Optional[Policy] = None
 

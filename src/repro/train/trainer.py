@@ -55,11 +55,32 @@ class TrainConfig:
     opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
 
 
-def make_train_step(model, cfg: ArchConfig, tc: TrainConfig) -> Callable:
+def make_train_step(model, cfg: ArchConfig, tc: TrainConfig,
+                    mesh=None) -> Callable:
+    """Build the jit-able train step.
+
+    ``mesh``: optional ``jax.sharding.Mesh``. When it has more than one
+    device on the "data" axis (and microbatching is on), the cross-device
+    scalar LOSS METRIC folds through ``collectives.sharded_asum`` —
+    per-device compensated Pallas kernels, all-gathered (s, c) grids, and
+    the deterministic two-sum tree — instead of the local ``kahan_step``
+    scan fold, so the reported loss is bitwise reproducible regardless of
+    backend reduction order. ``tc.microbatches`` must then divide by the
+    data-axis size (validated HERE, not silently skipped). The gradient
+    path is unchanged; this is the metric plumbing the ROADMAP left open
+    for multi-host training.
+    """
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
             model.loss, has_aux=True)(params, batch)
         return loss, metrics, grads
+
+    n_data = 1 if mesh is None else int(mesh.shape.get("data", 1))
+    if n_data > 1 and tc.microbatches > 1 and tc.microbatches % n_data:
+        raise ValueError(
+            f"microbatches ({tc.microbatches}) must divide by the mesh "
+            f"data-axis size ({n_data}) for the sharded loss-metric fold "
+            "— refusing to silently fall back to the local fold")
 
     def train_step(params, opt_state, batch):
         adt = jnp.dtype(tc.accum_dtype)
@@ -86,15 +107,25 @@ def make_train_step(model, cfg: ArchConfig, tc: TrainConfig) -> Callable:
                         jax.tree.map(jnp.add, acc.value, grads), acc.comp)
                 from repro.core.kahan import kahan_step
                 loss_s, loss_c = kahan_step(loss_s, loss_c, loss)
-                return (acc, loss_s, loss_c), metrics
+                return (acc, loss_s, loss_c), (metrics, loss)
 
             zero = KahanAccumulator.zeros_like(
                 jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params))
-            (acc, loss_s, loss_c), metrics = jax.lax.scan(
+            (acc, loss_s, loss_c), (metrics, losses) = jax.lax.scan(
                 body, (zero, jnp.zeros((), jnp.float32),
                        jnp.zeros((), jnp.float32)), micro)
             grads = acc.scale(1.0 / n).total()
-            loss = (loss_s + loss_c) / n
+            if n_data > 1:
+                # engine's sharded path: the [n_micro] loss vector shards
+                # over "data", each device reduces its slice with the
+                # compensated kernel, grids all-gather + tree-merge.
+                # (divisibility validated at build time above)
+                from repro.distributed import collectives
+
+                loss = collectives.sharded_asum(
+                    mesh, losses.astype(jnp.float32)) / n
+            else:
+                loss = (loss_s + loss_c) / n
             metrics = jax.tree.map(lambda m: m[-1], metrics)
 
         lr_scale = schedules.warmup_cosine(opt_state.step, warmup=tc.warmup,
@@ -118,13 +149,14 @@ class Trainer:
 
     def __init__(self, cfg: ArchConfig, tc: TrainConfig, data: SyntheticLM,
                  failure_hook: Optional[Callable[[int], None]] = None,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None):
         self.cfg = cfg
         self.tc = tc
         self.data = data
         self.failure_hook = failure_hook
         self.model = build_model(cfg)
-        self.step_fn = jax.jit(make_train_step(self.model, cfg, tc),
+        self.step_fn = jax.jit(make_train_step(self.model, cfg, tc,
+                                               mesh=mesh),
                                donate_argnums=(0, 1))
         key = jax.random.key(seed)
         self.params, self.specs = self.model.init(key)

@@ -79,3 +79,49 @@ def test_elastic_reshard_on_load(tmp_path):
     assert restored["params"]["w"].sharding == shardings["params"]["w"]
     np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
                                   np.asarray(tree["params"]["w"]))
+
+
+def test_kahan_adamw_comp_buffers_resume_bitwise(tmp_path):
+    """Resume determinism of the optimizer's (s, c) state: save -> restore
+    -> one step must be BITWISE-identical to an uninterrupted run. The
+    comp buffer is load-bearing for bf16 params (it carries the bits bf16
+    drops); silently zeroing it on restore would pass any tolerance-based
+    check while breaking long-horizon accumulation."""
+    from repro.optim import AdamWConfig, apply_update
+    from repro.optim import init as opt_init
+
+    rng = np.random.default_rng(11)
+    params = {"w": jnp.asarray(rng.standard_normal((16, 8)), jnp.bfloat16),
+              "b": jnp.asarray(rng.standard_normal((8,)), jnp.float32)}
+    cfg = AdamWConfig(kahan=True, lr=1e-2)
+    grads = [jax.tree.map(
+        lambda p, s=s: jnp.asarray(
+            rng.standard_normal(p.shape) * 1e-3, p.dtype), params)
+        for s in range(3)]
+
+    # uninterrupted: three steps straight through
+    p_ref, st_ref = params, opt_init(cfg, params)
+    for g in grads:
+        p_ref, st_ref, _ = apply_update(cfg, p_ref, g, st_ref)
+
+    # interrupted: two steps, checkpoint, restore, third step
+    p, st = params, opt_init(cfg, params)
+    for g in grads[:2]:
+        p, st, _ = apply_update(cfg, p, g, st)
+    assert st.comp is not None
+    assert max(float(jnp.abs(c).max())
+               for c in jax.tree.leaves(st.comp)) > 0  # comp engaged
+    ckpt.save(str(tmp_path), 2, {"params": p, "opt": st})
+    restored, step, _ = ckpt.restore(str(tmp_path), {"params": p, "opt": st})
+    assert step == 2
+    p2, st2 = restored["params"], restored["opt"]
+    # the restored (s, c) state is bit-identical...
+    for a, b in zip(jax.tree.leaves((p, st)), jax.tree.leaves((p2, st2))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # ...and so is the step taken from it
+    p3, st3, _ = apply_update(cfg, p2, grads[2], st2)
+    for a, b in zip(jax.tree.leaves((p_ref, st_ref)),
+                    jax.tree.leaves((p3, st3))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -211,3 +211,125 @@ def test_sharded_merge_matches_single_device_on_2_devices():
                          env=env, cwd=REPO)
     assert res.returncode == 0, res.stderr[-2000:]
     assert "OK" in res.stdout
+
+
+# --- matmul on the engine contract -------------------------------------------
+
+def _mm_batch(b, m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((b, m, k)), jnp.float32),
+            jnp.asarray(rng.standard_normal((b, k, n)), jnp.float32))
+
+_MM_BLOCKS = dict(block_m=16, block_n=128, block_k=256)
+
+
+def test_batched_matmul_bitwise_matches_loop_every_scheme():
+    """Acceptance bar: ops.batched_matmul is bitwise-equal to a Python
+    loop of ops.matmul calls for EVERY registered scheme (ragged shapes —
+    the engine pads/clamps identically on both paths)."""
+    from repro.kernels import schemes
+
+    a, b = _mm_batch(3, 24, 700, 130, seed=31)
+    for name in schemes.names():
+        got = ops.batched_matmul(a, b, scheme=name, **_MM_BLOCKS)
+        want = jnp.stack([ops.matmul(a[i], b[i], scheme=name, **_MM_BLOCKS)
+                          for i in range(3)])
+        assert np.array_equal(np.asarray(got), np.asarray(want)), name
+
+
+def test_vmap_matmul_dispatches_to_batched_grid():
+    a, b = _mm_batch(3, 24, 700, 130, seed=37)
+    vm = jax.vmap(lambda x, y: ops.matmul(x, y, scheme="kahan",
+                                          **_MM_BLOCKS))(a, b)
+    lp = jnp.stack([ops.matmul(a[i], b[i], scheme="kahan", **_MM_BLOCKS)
+                    for i in range(3)])
+    assert np.array_equal(np.asarray(vm), np.asarray(lp))
+
+
+def test_matmul_grad_flows_through_engine():
+    """ops.matmul is differentiable (custom VJP): the backward matmuls
+    run the same compensated kernel, and the result matches the plain
+    fp32 matmul cotangents tightly."""
+    a, b = _mm_batch(1, 16, 512, 128, seed=41)
+    a, b = a[0], b[0]
+
+    def loss(x, y):
+        return jnp.sum(ops.matmul(x, y, scheme="kahan", **_MM_BLOCKS))
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    da_ref = jnp.ones((16, 128)) @ b.T
+    db_ref = a.T @ jnp.ones((16, 128))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_accumulators_are_engine_accumulators():
+    """The matmul kernel emits raw (s, c) grids under the shared
+    total = finalize(s, c) contract; the collapsed entry point equals
+    finalize-then-slice of the producer's output."""
+    a, b = _mm_batch(1, 24, 700, 130, seed=43)
+    a, b = a[0], b[0]
+    eng = CompensatedReduction(scheme="dot2", blocks=(16, 128, 256))
+    acc = eng.matmul_accumulators(a, b)
+    assert isinstance(acc, Accumulator)
+    want = eng.scheme.finalize(acc.s, acc.c)[:24, :130]
+    got = eng.matmul(a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sharded_matmul_single_device_matches_merge():
+    """Gather-side contract: sharded_matmul == merge_accumulator_grids of
+    the stacked per-device (s, c) grids (1-device mesh; the 2-device
+    run is pinned by the slow-tier subprocess test below)."""
+    from repro.kernels.engine import merge_accumulator_grids
+
+    mesh = jax.make_mesh((1,), ("data",))
+    a, b = _mm_batch(1, 24, 512, 130, seed=47)
+    a, b = a[0], b[0]
+    got = coll.sharded_matmul(mesh, a, b, scheme="kahan", **_MM_BLOCKS)
+    eng = CompensatedReduction(scheme="kahan", blocks=(16, 128, 256))
+    acc = eng.matmul_accumulators(a, b)
+    want = merge_accumulator_grids(acc.s[None], acc.c[None])[:24, :130]
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+_MULTIDEV_MATMUL_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.distributed import collectives as coll
+    from repro.kernels.engine import (CompensatedReduction,
+                                      merge_accumulator_grids)
+
+    assert len(jax.devices()) == 2
+    mesh = jax.make_mesh((2,), ("data",))
+    rng = np.random.default_rng(5)
+    m, k, n = 24, 1024, 130
+    a = jnp.asarray(rng.standard_normal((m, k)) * 1e2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)) * 1e2, jnp.float32)
+    got = coll.sharded_matmul(mesh, a, b, scheme="kahan", block_m=16,
+                              block_n=128, block_k=256)
+
+    eng = CompensatedReduction(scheme="kahan", blocks=(16, 128, 256))
+    accs = [eng.matmul_accumulators(a[:, i*(k//2):(i+1)*(k//2)],
+                                    b[i*(k//2):(i+1)*(k//2)])
+            for i in range(2)]
+    ss = jnp.stack([acc.s for acc in accs])
+    cs = jnp.stack([acc.c for acc in accs])
+    want = merge_accumulator_grids(ss, cs)[:m, :n]
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_matmul_matches_device_major_merge_on_2_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    res = subprocess.run([sys.executable, "-c", _MULTIDEV_MATMUL_SCRIPT],
+                         capture_output=True, text=True, timeout=300,
+                         env=env, cwd=REPO)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "OK" in res.stdout

@@ -1,0 +1,114 @@
+"""Model-layer routing onto the engine kernels (ArchConfig.kahan_matmul /
+kahan_attention): projections through ops.matmul (custom VJP — gradients
+stay on the engine) and prefill attention through the fused flash kernel,
+all selected by one ambient Policy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.kernels import use_policy
+from repro.models import build_model
+from repro.models.layers import AttnStatic, attention, attn_init, dense
+
+
+def _tiny_cfg(**kw):
+    return ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64, **kw)
+
+
+def _batch(cfg, b=2, s=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                  jnp.int32),
+            "loss_mask": jnp.ones((b, s), jnp.float32)}
+
+
+def test_dense_compensated_matches_plain():
+    rng = np.random.default_rng(1)
+    p = {"w": jnp.asarray(rng.standard_normal((64, 4, 16)), jnp.float32)}
+    x = jnp.asarray(rng.standard_normal((2, 8, 64)), jnp.float32)
+    plain = dense(p, x, jnp.float32)
+    with use_policy(scheme="kahan", blocks=(16, 128, 128)):
+        comp = dense(p, x, jnp.float32, compensated=True)
+    assert comp.shape == plain.shape
+    np.testing.assert_allclose(np.asarray(comp), np.asarray(plain),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_prefill_routes_through_flash():
+    """kahan_attention=True: the prefill path (cache present, causal,
+    full window) runs the engine flash kernel and agrees with the
+    chunked softmax core; decode afterwards is untouched."""
+    cfg = _tiny_cfg()
+    st0 = AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                     cfg.rope_theta, cfg.qkv_bias, jnp.float32)
+    st1 = AttnStatic(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                     cfg.rope_theta, cfg.qkv_bias, jnp.float32,
+                     kahan_attention=True)
+    params, _ = attn_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 64, cfg.d_model)), jnp.float32)
+    q_pos = jnp.arange(64)
+    cache = (jnp.zeros((2, 80, cfg.n_kv_heads, cfg.head_dim)),
+             jnp.zeros((2, 80, cfg.n_kv_heads, cfg.head_dim)))
+    out0, _ = attention(params, st0, x, q_pos=q_pos, cache=cache)
+    with use_policy(scheme="kahan"):
+        out1, _ = attention(params, st1, x, q_pos=q_pos, cache=cache)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.slow  # full fwd+bwd through interpret-mode Pallas projections
+def test_model_loss_and_grads_through_engine_matmul():
+    """kahan_matmul=True: the transformer's projections (attention + MLP)
+    run ops.matmul; forward loss matches the plain model tightly and
+    gradients flow (custom VJP) with matching norms. (The cheap custom-VJP
+    unit check lives in test_engine.py; this is the whole-model path.)"""
+    base = _tiny_cfg()
+    comp = _tiny_cfg(kahan_matmul=True)
+    batch = _batch(base)
+    m0, mc = build_model(base), build_model(comp)
+    params, _ = m0.init(jax.random.key(0))
+    l0, _ = m0.loss(params, batch)
+    g0 = jax.grad(lambda p: m0.loss(p, batch)[0])(params)
+    with use_policy(scheme="kahan", blocks=(64, 128, 128)):
+        lc, _ = mc.loss(params, batch)
+        gc = jax.grad(lambda p: mc.loss(p, batch)[0])(params)
+    assert abs(float(l0) - float(lc)) < 1e-4, (float(l0), float(lc))
+    n0 = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(g0))))
+    nc = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(gc))))
+    assert np.isfinite(nc)
+    assert abs(n0 - nc) < 1e-2 * max(n0, 1.0), (n0, nc)
+
+
+@pytest.mark.slow
+def test_prefill_decode_with_both_knobs():
+    """Greedy prefill+decode agree between the plain model and the
+    engine-routed one (flash prefill + compensated projections)."""
+    base = _tiny_cfg()
+    comp = _tiny_cfg(kahan_matmul=True, kahan_attention=True)
+    batch = _batch(base)
+    m0, mc = build_model(base), build_model(comp)
+    params, _ = m0.init(jax.random.key(0))
+    c0, _ = m0.init_cache(2, 68)
+    logits0, c0 = m0.prefill(params, batch, c0)
+    with use_policy(scheme="kahan", blocks=(64, 128, 128)):
+        cc, _ = mc.init_cache(2, 68)
+        logitsc, cc = mc.prefill(params, batch, cc)
+        tok = jnp.argmax(logits0, -1).astype(jnp.int32)
+        d0, _ = m0.decode_step(params, c0, tok, jnp.asarray(64))
+        dc, _ = mc.decode_step(params, cc, tok, jnp.asarray(64))
+    np.testing.assert_allclose(np.asarray(logitsc), np.asarray(logits0),
+                               rtol=1e-3, atol=1e-3)
+    assert np.array_equal(np.asarray(jnp.argmax(d0, -1)),
+                          np.asarray(jnp.argmax(dc, -1)))

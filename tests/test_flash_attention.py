@@ -1,10 +1,16 @@
-"""Flash-attention kernel: oracle sweeps + compensated-accumulator benefit."""
+"""Flash-attention kernel: oracle sweeps + compensated-accumulator benefit.
+
+Under the engine contract the kernel emits raw (l, acc) accumulator
+grids and ``ref.flash_attention_ref`` traces the SAME shared block body
+— so kernel-vs-oracle equality is BITWISE for every registered scheme
+(the softmax ``_ref`` below stays as an independent loose oracle)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ref, schemes
 from repro.kernels.flash_attention import flash_attention
 
 
@@ -33,6 +39,45 @@ def test_matches_oracle(shape, causal, scheme):
     want = _ref(q, k, v, causal)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", schemes.names())
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_block_oracle_bitwise(name, causal):
+    """Acceptance bar for the engine contract: interpret-mode kernel
+    output == ref.flash_attention_ref to the BIT, for every registered
+    scheme, on a ragged (pad-requiring) shape."""
+    rng = np.random.default_rng(17)
+    bh, sq, skv, dh = 2, 300, 300, 64
+    q = jnp.asarray(rng.standard_normal((bh, sq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    out = flash_attention(q, k, v, block_q=128, block_k=128, scheme=name,
+                          causal=causal)
+    want = ref.flash_attention_ref(q, k, v, scheme=name, block_q=128,
+                                   block_k=128, causal=causal)
+    assert np.array_equal(np.asarray(out), np.asarray(want)), name
+
+
+def test_flash_accumulators_follow_engine_contract():
+    """The kernel emits raw (s, c) pairs; finalize(s, c) / finalize(l)
+    outside the kernel reproduces the public entry point exactly."""
+    from repro.kernels.engine import Accumulator, CompensatedReduction
+
+    rng = np.random.default_rng(19)
+    q = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 64)), jnp.float32)
+    eng = CompensatedReduction(scheme="kahan")
+    l_acc, o_acc, sq = eng.flash_attention_accumulators(
+        q, k, v, block_q=128, block_k=128, causal=True)
+    assert isinstance(l_acc, Accumulator) and isinstance(o_acc, Accumulator)
+    want = (eng.scheme.finalize(o_acc.s, o_acc.c)
+            / jnp.maximum(eng.scheme.finalize(l_acc.s, l_acc.c), 1e-30)
+            )[:, :sq, :]
+    got = eng.flash_attention(q, k, v, block_q=128, block_k=128,
+                              causal=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_bf16_inputs():

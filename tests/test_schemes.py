@@ -300,8 +300,18 @@ def test_policy_is_frozen_and_validates():
     pol = Policy()
     with pytest.raises(dataclasses.FrozenInstanceError):
         pol.unroll = 4
-    with pytest.raises(ValueError, match="float32"):
-        Policy(compute_dtype=jnp.float64)
+    # unsupported accumulate dtypes fail fast and ENUMERATE the menu
+    with pytest.raises(ValueError) as ei:
+        Policy(compute_dtype=jnp.float16)
+    msg = str(ei.value)
+    assert "bfloat16" in msg and "float32" in msg and "float64" in msg, msg
+    with pytest.raises(ValueError, match="int32"):
+        Policy(compute_dtype=jnp.int32)
+    # float64 requires x64 mode; the boundary says so instead of letting
+    # jax silently truncate every array to fp32 inside a trace
+    if not jax.config.jax_enable_x64:
+        with pytest.raises(ValueError, match="x64"):
+            Policy(compute_dtype=jnp.float64)
     with pytest.raises(ValueError, match="unroll"):
         Policy(unroll=0)
 
