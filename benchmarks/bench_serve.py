@@ -1,0 +1,81 @@
+"""Serving-engine throughput: tokens/s vs decode-slot occupancy.
+
+The 2016 follow-up's saturation claim, in serving form: compensation is
+free exactly when the workload is throughput-bound at scale — so the row
+that matters is tokens/s as the continuous-batching engine's decode
+slots fill, per registered compensation scheme (the telemetry reductions
+ride every tick). Rows land in BENCH_*.json as
+``serve_<scheme>_occ<k>`` so the occupancy scaling is tracked release
+over release; the ``derived`` column carries tok/s.
+
+Interpret mode on CPU validates the ordering (occupancy amortizes the
+fixed per-tick cost), not TPU wall time.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import ArchConfig
+from repro.kernels import schemes
+from repro.kernels.schemes import Policy
+from repro.models import build_model
+from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
+
+
+def _tiny_cfg():
+    return ArchConfig(name="bench-serve", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, param_dtype="float32",
+                      compute_dtype="float32", loss_chunk=64)
+
+
+def _run_once(cfg, model, params, ec, occupancy, prompt_len, new_tokens):
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (prompt_len,)).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=new_tokens))
+            for _ in range(occupancy)]
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    t0 = time.perf_counter()
+    handles = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(h.tokens) for h in handles.values())
+    return n_tok, dt
+
+
+def main(max_slots: int = 4, prompt_len: int = 16, new_tokens: int = 16,
+         ) -> None:
+    print(f"# serving engine: max_slots={max_slots} prompt={prompt_len} "
+          f"new={new_tokens} (tokens/s vs occupancy per scheme; the tick "
+          "cost is fixed per step, so tok/s should grow with occupancy)")
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    for name in schemes.names():
+        ec = EngineConfig(max_slots=max_slots,
+                          max_len=prompt_len + new_tokens,
+                          track_stats=True,
+                          policy=Policy(scheme=name, unroll=2))
+        # warm the compile caches (shared on the model across engines)
+        _run_once(cfg, model, params, ec, 1, prompt_len, 2)
+        for occ in range(1, max_slots + 1):
+            n_tok, dt = _run_once(cfg, model, params, ec, occ,
+                                  prompt_len, new_tokens)
+            emit(f"serve_{name}_occ{occ}", dt * 1e6 / max(n_tok, 1),
+                 f"{n_tok / dt:.1f}tok/s")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (matches the run.py smoke cell)")
+    args = ap.parse_args()
+    if args.smoke:
+        main(max_slots=2, prompt_len=8, new_tokens=4)
+    else:
+        main()

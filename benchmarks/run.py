@@ -14,6 +14,9 @@ blocks). Mapping to the paper:
                         claim, in batched-serving form)
   bench_matmul_batched  batched matmul engine: one (batch, mb, nb, ks)
                         grid vs a per-call loop + the vmap dispatch row
+  bench_serve           continuous-batching engine: tokens/s vs decode-
+                        slot occupancy for every registered scheme (the
+                        saturation claim in request-level serving form)
   bench_scaling         Fig. 3 — multicore/multichip scaling + saturation
   bench_architectures   Table 2 / Fig. 4 — cross-generation comparison
   bench_flash_attention the §Perf-identified fix: fused attention with
@@ -52,6 +55,7 @@ def _benchmarks():
         bench_matmul_batched,
         bench_roofline,
         bench_scaling,
+        bench_serve,
     )
 
     return [
@@ -61,6 +65,8 @@ def _benchmarks():
          {"batch": 2, "n": 8 * 128 * 4}),
         ("bench_matmul_batched", bench_matmul_batched, {},
          {"batch": 2, "m": 32, "k": 512, "n": 128}),
+        ("bench_serve", bench_serve, {},
+         {"max_slots": 2, "prompt_len": 8, "new_tokens": 4}),
         ("bench_scaling", bench_scaling, {}, {}),
         ("bench_architectures", bench_architectures, {}, {}),
         ("bench_flash_attention", bench_flash_attention, {}, {}),

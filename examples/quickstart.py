@@ -55,7 +55,23 @@ def main():
         err = np.abs(c - c64).max() / np.abs(c64).max()
         print(f"  {scheme:6s} fp32 accumulate: max relerr vs f64 {err:.2e}")
 
-    # 4. The ECM model: why Kahan is free on TPU when vectorized.
+    # 4. Request-level serving in five lines: the continuous-batching
+    #    engine admits each request into a decode slot, samples with its
+    #    own fold_in stream, and guarantees its tokens + compensated
+    #    telemetry are bitwise identical solo or under traffic.
+    from repro.configs import get_smoke
+    from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
+
+    engine = InferenceEngine(get_smoke("olmo-1b"),
+                             EngineConfig(max_slots=2, max_len=16,
+                                          track_stats=True))
+    handles = engine.run([Request(prompt=[3, 1, 4, 1, 5],
+                                  sampling=SamplingParams(max_new_tokens=4)),
+                          Request(prompt=[2, 7],
+                                  sampling=SamplingParams(max_new_tokens=2))])
+    print("\nserved:", {rid: h.tokens for rid, h in sorted(handles.items())})
+
+    # 5. The ECM model: why Kahan is free on TPU when vectorized.
     #    Variant descriptions derive from the scheme registry.
     from repro.core import ecm
     for k in (ecm.NAIVE_DOT_TPU, ecm.KAHAN_DOT_TPU, ecm.KAHAN_DOT_SEQ_TPU):

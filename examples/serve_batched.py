@@ -1,5 +1,11 @@
-"""Batched serving: prefill a batch of prompts, decode new tokens with the
-KV-cache decode step (ring buffers on SWA archs, recurrent state on SSM).
+"""Request-level serving: continuous batching over the model-zoo API.
+
+Submits a staggered trace of mixed-length requests to
+``repro.serve.InferenceEngine``: a fixed decode batch of ``--max-slots``
+per-slot KV caches, where finished requests free their slot mid-flight
+and queued requests are prefilled into the gap. Each request's tokens
+and compensated logit-norm telemetry are bitwise identical to serving
+it alone (see tests/test_serve_engine.py for the enforced contract).
 
     PYTHONPATH=src python examples/serve_batched.py [--arch qwen2.5-3b]
 """
@@ -7,49 +13,50 @@ KV-cache decode step (ring buffers on SWA archs, recurrent state on SSM).
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.train import ServeConfig, Server
+from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--new-tokens", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)  # reduced config: runnable on CPU
-    server = Server(cfg, ServeConfig(temperature=0.0))
-
     rng = np.random.default_rng(0)
-    batch = {
-        "tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size,
-                         (args.batch, args.prompt_len)), jnp.int32),
-    }
-    if cfg.vision is not None:
-        batch["vision_embeds"] = jnp.asarray(
-            rng.standard_normal(
-                (args.batch, cfg.vision.n_patches, cfg.d_model)),
-            jnp.float32)
-    if cfg.encoder is not None:
-        batch["frames"] = jnp.asarray(
-            rng.standard_normal(
-                (args.batch, cfg.encoder.n_frames, cfg.d_model)),
-            jnp.float32)
+    # mixed prompt/output lengths, staggered arrivals — the traffic shape
+    # the lock-step batch API could not express
+    requests, arrivals = [], []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        new = int(rng.integers(2, args.new_tokens + 1))
+        requests.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            sampling=SamplingParams(max_new_tokens=new)))
+        arrivals.append(i // 2)  # two arrivals per engine step
 
+    engine = InferenceEngine(
+        cfg, EngineConfig(max_slots=args.max_slots, max_len=64,
+                          track_stats=True))
     t0 = time.perf_counter()
-    out = server.generate(batch, args.new_tokens)
+    n_tok = 0
+    for t, events in engine.stream(requests, arrivals):
+        n_tok += len(events)
+        line = ", ".join(f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
+                         for e in events)
+        print(f"step {t:2d} occ={engine.scheduler.occupancy}  {line}")
     dt = time.perf_counter() - t0
-    print(f"arch={args.arch} batch={args.batch} "
-          f"prompt={args.prompt_len} new={args.new_tokens}")
-    print(f"generated token ids (first row): {np.asarray(out[0])[:16]} ...")
-    tput = args.batch * args.new_tokens / dt
-    print(f"wall: {dt:.2f}s  ({tput:.1f} tok/s incl. compile)")
+
+    for rid, h in sorted(engine.handles.items()):
+        print(f"request {rid}: {h.tokens}  "
+              f"|logits|^2 last={h.telemetry[-1]:.4e}")
+    print(f"wall: {dt:.2f}s  ({n_tok / dt:.1f} tok/s incl. compile, "
+          f"{len(requests)} requests over {engine.t} steps)")
 
 
 if __name__ == "__main__":

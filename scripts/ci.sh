@@ -9,12 +9,17 @@
 #   scripts/ci.sh slow       # slow tier only
 #   scripts/ci.sh bench      # benchmarks smoke stage only
 #
-# Deprecation gate: both stages run with DeprecationWarning promoted to
-# an error for warnings ATTRIBUTED to repro.* modules (the legacy
-# compensation 'mode=' kwarg warns with a stacklevel that lands on its
-# caller), proving no internal call site still uses the legacy alias.
-# Test call sites that deliberately exercise the alias attribute to the
-# test module and stay warnings (asserted via pytest.warns).
+# Deprecation gate: both pytest stages run with DeprecationWarning
+# promoted to an error for warnings ATTRIBUTED to repro.* modules (e.g.
+# the deprecated lock-step Server shim warns at its caller), proving no
+# internal call site leans on a deprecated surface. Test call sites that
+# deliberately exercise one attribute to the test module and stay
+# warnings.
+#
+# mode= gate: the legacy compensation 'mode=' kwarg was REMOVED (PR 4);
+# a grep gate fails CI if it reappears as an actual kwarg anywhere in
+# src/repro/ (comment lines and the unrelated jnp scatter mode="drop"
+# are excluded).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,6 +29,16 @@ stage="${1:-all}"
 # -o filterwarnings treats module as a REGEX (pytest CLI -W would escape
 # it to a literal full-module match and miss submodules).
 DEPRECATION_GATE=(-o 'filterwarnings=error::DeprecationWarning:repro(\..*)?')
+
+echo "=== stage 0: legacy mode= grep gate (src/repro) ==="
+if grep -RnE '(^|[(,])[[:space:]]*mode=|mode: Optional\[str\]' src/repro \
+        --include='*.py' \
+        | grep -vE '^[^:]+:[0-9]+:[[:space:]]*#' \
+        | grep -v 'mode="drop"' | grep .; then
+    echo "FAIL: legacy 'mode=' kwarg reappeared in src/repro/ (use" \
+         "scheme=/Policy — see the migration note in repro.kernels.schemes)"
+    exit 1
+fi
 
 if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
     echo "=== stage 1: tier-1 (fast) + repro.* deprecation gate ==="

@@ -40,7 +40,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core.kahan import compensated_psum_scalar, kahan_step
-from repro.kernels import schemes as _schemes
 from repro.kernels.engine import (
     Accumulator,
     CompensatedReduction,
@@ -82,8 +81,8 @@ def _sharded_reduce(axis: str, local_accumulate):
 
 def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
                  scheme: SchemeSpec = None, unroll: Optional[int] = None,
-                 interpret: Optional[bool] = None, compute_dtype=None,
-                 mode: Optional[str] = None) -> jax.Array:
+                 interpret: Optional[bool] = None,
+                 compute_dtype=None) -> jax.Array:
     """Compensated sum of an array sharded over one mesh axis.
 
     Per-device: the engine's Pallas sum kernel over the local shard.
@@ -91,10 +90,8 @@ def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
     two-sum tree — NOT a psum. Returns a replicated compute-dtype scalar
     that is bitwise reproducible for a fixed mesh size. ``scheme`` is any
     registered compensation scheme / a Policy (None -> ambient policy);
-    ``compute_dtype`` overrides the policy's accumulate dtype; ``mode=``
-    is the deprecated alias.
+    ``compute_dtype`` overrides the policy's accumulate dtype.
     """
-    scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, unroll=unroll,
                                interpret=interpret,
                                compute_dtype=compute_dtype)
@@ -106,11 +103,10 @@ def sharded_asum(mesh: Mesh, x: jax.Array, *, axis: str = "data",
 def sharded_dot(mesh: Mesh, a: jax.Array, b: jax.Array, *,
                 axis: str = "data", scheme: SchemeSpec = None,
                 unroll: Optional[int] = None,
-                interpret: Optional[bool] = None, compute_dtype=None,
-                mode: Optional[str] = None) -> jax.Array:
+                interpret: Optional[bool] = None,
+                compute_dtype=None) -> jax.Array:
     """Compensated dot of two identically-sharded 1-D arrays (see
     ``sharded_asum`` for the merge and scheme-resolution semantics)."""
-    scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, unroll=unroll,
                                interpret=interpret,
                                compute_dtype=compute_dtype)
@@ -124,8 +120,8 @@ def sharded_matmul(mesh: Mesh, a: jax.Array, b: jax.Array, *,
                    block_m: Optional[int] = None,
                    block_n: Optional[int] = None,
                    block_k: Optional[int] = None,
-                   interpret: Optional[bool] = None, compute_dtype=None,
-                   mode: Optional[str] = None) -> jax.Array:
+                   interpret: Optional[bool] = None,
+                   compute_dtype=None) -> jax.Array:
     """C = A @ B with the K (contraction) axis sharded over ``axis``.
 
     ``a``: [M, K] sharded on its second dim; ``b``: [K, N] sharded on its
@@ -137,7 +133,6 @@ def sharded_matmul(mesh: Mesh, a: jax.Array, b: jax.Array, *,
     result is bitwise reproducible for a fixed mesh size. Returns the
     replicated [M, N] product in the compute dtype.
     """
-    scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, interpret=interpret,
                                compute_dtype=compute_dtype)
     m, n = a.shape[0], b.shape[1]

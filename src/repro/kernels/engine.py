@@ -12,9 +12,8 @@ The *variant axis* (which accumulation scheme runs per block) is owned by
 the ``repro.kernels.schemes`` registry: ``CompensatedReduction`` resolves
 a scheme name / ``CompensationScheme`` / ``Policy`` ONCE at construction
 (unknown names fail fast with the registered menu) and hands the resolved
-scheme object to the kernels as a static argument. The deprecated
-``mode: str`` kwarg still works — it resolves through the same registry
-(bitwise-identical results) and emits a ``DeprecationWarning``.
+scheme object to the kernels as a static argument. (The legacy ``mode``
+alias was removed — see the migration note in ``repro.kernels.schemes``.)
 
 ``CompensatedReduction`` owns the three policies the kernel wrappers used
 to re-implement independently:
@@ -184,7 +183,6 @@ class CompensatedReduction:
     compute_dtype accumulate dtype for every kernel body (None -> policy;
                   fp32 | f64 (x64 required) | bf16 — anything else fails
                   fast here, at construction)
-    mode          DEPRECATED alias for ``scheme`` (registry-resolved, warns)
 
     Unknown scheme names raise ``ValueError`` (listing the registered
     menu) here — at construction — never inside a kernel trace.
@@ -195,13 +193,9 @@ class CompensatedReduction:
     interpret: Optional[bool] = None
     blocks: Optional[Tuple[int, int, int]] = None
     compute_dtype: Any = None
-    mode: dataclasses.InitVar[Optional[str]] = None
 
-    def __post_init__(self, mode: Optional[str]):
-        # stacklevel 4 attributes the warning to the frame calling
-        # CompensatedReduction(...): helper(1) <- __post_init__(2) <-
-        # dataclass __init__(3) <- caller(4).
-        spec = _schemes.resolve_legacy_mode(mode, self.scheme, stacklevel=4)
+    def __post_init__(self):
+        spec = self.scheme
         if isinstance(spec, Policy):
             pol = spec
             spec = pol.scheme
@@ -424,18 +418,24 @@ class CompensatedReduction:
     # -- flash attention -----------------------------------------------------
     def flash_attention(self, q: jax.Array, k: jax.Array, v: jax.Array, *,
                         block_q: int = 256, block_k: int = 256,
-                        causal: bool = True) -> jax.Array:
+                        causal: bool = True,
+                        q_groups: int = 1) -> jax.Array:
         """Fused attention with compensated online-softmax accumulators.
 
-        q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. The engine promotes to the
-        compute dtype, pads Sq/Skv to block multiples (padded keys are
-        masked in-kernel via ``kv_len``), launches the flash grid, and
-        finalizes the kernel-emitted (l, acc) accumulator pairs with the
-        shared ``s + c`` contract. Returns [BH, Sq, dh] in the compute
-        dtype.
+        q: [BH, Sq, dh]; k/v: [BH // q_groups, Skv, dh]. The engine
+        promotes to the compute dtype, pads Sq/Skv to block multiples
+        (padded keys are masked in-kernel via ``kv_len``), launches the
+        flash grid, and finalizes the kernel-emitted (l, acc) accumulator
+        pairs with the shared ``s + c`` contract. Returns [BH, Sq, dh] in
+        the compute dtype.
+
+        ``q_groups``: GQA group factor G — each k/v head serves G
+        consecutive query heads through the kernel's k/v BlockSpec index
+        map (``bh // G``), so grouped k/v are never materialized G times.
         """
         l_acc, o_acc, sq = self.flash_attention_accumulators(
-            q, k, v, block_q=block_q, block_k=block_k, causal=causal)
+            q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+            q_groups=q_groups)
         l_tot = self.scheme.finalize(l_acc.s, l_acc.c)
         o_tot = self.scheme.finalize(o_acc.s, o_acc.c)
         out = o_tot / jnp.maximum(l_tot, 1e-30)
@@ -444,13 +444,21 @@ class CompensatedReduction:
     def flash_attention_accumulators(self, q: jax.Array, k: jax.Array,
                                      v: jax.Array, *, block_q: int = 256,
                                      block_k: int = 256, causal: bool = True,
+                                     q_groups: int = 1,
                                      ) -> Tuple[Accumulator, Accumulator, int]:
         """Raw (l, acc) accumulator pairs from the flash grid.
 
         Returns (l_acc [BH, Sq_pad, 1], o_acc [BH, Sq_pad, dh], sq) —
         ``sq`` is the un-padded query count for the caller's final slice.
+        With ``q_groups=G``, k/v carry [BH // G, Skv, dh] and the kernel
+        index map shares each k/v head across its G query heads.
         """
         bh, sq, dh = q.shape
+        if bh != k.shape[0] * q_groups:
+            raise ValueError(
+                f"flash_attention: q has {bh} head-rows but k/v carry "
+                f"{k.shape[0]} with q_groups={q_groups} "
+                f"(expected BH == BH_kv * q_groups)")
         skv = k.shape[1]
         block_q = min(block_q, _round_up(sq, 8))
         block_k = min(block_k, _round_up(skv, 128))
@@ -466,7 +474,7 @@ class CompensatedReduction:
         l_s, l_c, o_s, o_c = _fa.flash_accumulators(
             q, k, v, block_q=block_q, block_k=block_k, scheme=self.scheme,
             causal=causal, kv_len=skv, interpret=self._interpret(),
-            compute_dtype=self.compute_dtype)
+            q_groups=q_groups, compute_dtype=self.compute_dtype)
         return Accumulator(l_s, l_c), Accumulator(o_s, o_c), sq
 
 

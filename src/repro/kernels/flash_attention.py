@@ -47,7 +47,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels import schemes as _schemes
 from repro.kernels.schemes import CompensationScheme
 
 NEG_INF = -1e30
@@ -166,21 +165,29 @@ def _flash_kernel(q_ref, k_ref, v_ref, ls_out, lc_out, as_out, ac_out,
 @functools.partial(
     jax.jit,
     static_argnames=("block_q", "block_k", "scheme", "causal", "kv_len",
-                     "interpret", "compute_dtype"))
+                     "interpret", "q_groups", "compute_dtype"))
 def flash_accumulators(q, k, v, *, block_q, block_k,
                        scheme: CompensationScheme, causal, kv_len,
-                       interpret, compute_dtype=jnp.float32,
+                       interpret, q_groups: int = 1,
+                       compute_dtype=jnp.float32,
                        ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Run the flash grid; returns the raw (l_s, l_c, acc_s, acc_c) grids.
 
-    ``q``: [BH, Sq, dh]; ``k``/``v``: [BH, Skv, dh], already promoted to
-    ``compute_dtype`` and padded to block multiples by the engine.
-    ``kv_len`` is the un-padded key count (padded keys are masked).
-    l grids are [BH, Sq, 1]; acc grids [BH, Sq, dh].
+    ``q``: [BH, Sq, dh]; ``k``/``v``: [BH // q_groups, Skv, dh], already
+    promoted to ``compute_dtype`` and padded to block multiples by the
+    engine. ``kv_len`` is the un-padded key count (padded keys are
+    masked). l grids are [BH, Sq, 1]; acc grids [BH, Sq, dh].
+
+    ``q_groups``: the GQA group factor G. Query head-rows are laid out
+    [..., kv_head, group] (G consecutive q rows per kv head), so the k/v
+    BlockSpec index map fetches block ``bh // G`` — each k/v head is
+    read once per group straight from its single copy; the duplication
+    never leaves the index map (no broadcast materialization).
     """
     bh, sq, dh = q.shape
     _, skv, _ = k.shape
     assert sq % block_q == 0 and skv % block_k == 0
+    assert bh == k.shape[0] * q_groups, (q.shape, k.shape, q_groups)
     grid = (bh, sq // block_q, skv // block_k)
     scale = dh ** -0.5
 
@@ -193,8 +200,10 @@ def flash_accumulators(q, k, v, *, block_q, block_k,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j: (b // q_groups, j, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j: (b // q_groups, j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
@@ -223,20 +232,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 256, block_k: int = 256,
                     scheme: Union[str, CompensationScheme, None] = None,
                     causal: bool = True, interpret: Optional[bool] = None,
-                    mode: Optional[str] = None) -> jax.Array:
-    """q: [BH, Sq, dh]; k/v: [BH, Skv, dh]. Returns [BH, Sq, dh] in the
-    engine's compute dtype.
+                    q_groups: int = 1) -> jax.Array:
+    """q: [BH, Sq, dh]; k/v: [BH // q_groups, Skv, dh]. Returns
+    [BH, Sq, dh] in the engine's compute dtype.
 
     Thin veneer over ``CompensatedReduction.flash_attention``: the engine
     owns padding (Sq/Skv to block multiples; padded keys masked),
     compute-dtype promotion, interpret resolution, and finalization of the
     (l, acc) accumulator pairs. ``scheme``: registered scheme name /
     CompensationScheme / Policy / None (None resolves the ambient
-    ``use_policy`` default). ``mode=`` is the deprecated alias.
+    ``use_policy`` default). ``q_groups``: GQA group factor — grouped k/v
+    heads are shared through the kernel's BlockSpec index map
+    (``bh // G``), never broadcast-materialized.
     """
     from repro.kernels.engine import CompensatedReduction
 
-    scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, interpret=interpret)
     return eng.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
-                               causal=causal)
+                               causal=causal, q_groups=q_groups)

@@ -9,15 +9,9 @@ Variant selection goes through the compensation-scheme registry
                None resolves the ambient ``schemes.use_policy`` default
     unroll     accumulator-group count (None -> policy)
     interpret  None -> Mosaic only on a real TPU backend
-    mode       DEPRECATED alias for ``scheme`` — resolves through the
-               same registry, returns bitwise-identical results, and
-               emits a DeprecationWarning
 
-Migration note: ``ops.dot(a, b, mode="kahan", unroll=4)`` becomes
-``ops.dot(a, b, scheme="kahan", unroll=4)``, or set the policy once::
-
-    with schemes.use_policy(scheme="kahan", unroll=4):
-        ops.dot(a, b)
+(The legacy ``mode=`` alias was removed — see the migration note in
+``repro.kernels.schemes``; ``scripts/ci.sh`` greps it out of existence.)
 
 Unknown scheme names raise ``ValueError`` (listing the registered menu)
 at the call boundary, before any kernel traces.
@@ -48,17 +42,14 @@ from typing import Optional
 import jax
 
 from repro.kernels import ref as _ref
-from repro.kernels import schemes as _schemes
 from repro.kernels.engine import CompensatedReduction, SchemeSpec
 
 
 def _engine(scheme: SchemeSpec, unroll: Optional[int],
-            interpret: Optional[bool], mode: Optional[str],
+            interpret: Optional[bool],
             compute_dtype=None) -> CompensatedReduction:
-    """Shared resolution: deprecated mode= folds into scheme (warning
-    attributed to the ops.* caller), then the engine resolves policy
-    defaults and fails fast on unknown names / unsupported dtypes."""
-    scheme = _schemes.resolve_legacy_mode(mode, scheme, stacklevel=4)
+    """Shared resolution: the engine resolves policy defaults and fails
+    fast on unknown scheme names / unsupported accumulate dtypes."""
     return CompensatedReduction(scheme=scheme, unroll=unroll,
                                 interpret=interpret,
                                 compute_dtype=compute_dtype)
@@ -66,53 +57,53 @@ def _engine(scheme: SchemeSpec, unroll: Optional[int],
 
 def dot(a: jax.Array, b: jax.Array, *, scheme: SchemeSpec = None,
         unroll: Optional[int] = None, interpret: Optional[bool] = None,
-        compute_dtype=None, mode: Optional[str] = None) -> jax.Array:
+        compute_dtype=None) -> jax.Array:
     """Compensated dot product of two arrays (raveled; compute-dtype
     accumulate and result — fp32 unless the policy / ``compute_dtype``
     says otherwise). vmap-aware: batching lands on the (batch, steps)
     grid."""
-    return _engine(scheme, unroll, interpret, mode, compute_dtype).dot(a, b)
+    return _engine(scheme, unroll, interpret, compute_dtype).dot(a, b)
 
 
 def asum(x: jax.Array, *, scheme: SchemeSpec = None,
          unroll: Optional[int] = None, interpret: Optional[bool] = None,
-         compute_dtype=None, mode: Optional[str] = None) -> jax.Array:
+         compute_dtype=None) -> jax.Array:
     """Compensated sum of an array (raveled; compute-dtype accumulate).
     vmap-aware: batching lands on the (batch, steps) grid."""
-    return _engine(scheme, unroll, interpret, mode, compute_dtype).asum(x)
+    return _engine(scheme, unroll, interpret, compute_dtype).asum(x)
 
 
 def batched_dot(a: jax.Array, b: jax.Array, *, scheme: SchemeSpec = None,
                 unroll: Optional[int] = None,
                 interpret: Optional[bool] = None,
-                compute_dtype=None, mode: Optional[str] = None) -> jax.Array:
+                compute_dtype=None) -> jax.Array:
     """[batch, n] x [batch, n] -> [batch] compensated dots as ONE Pallas
     grid (batch, steps) — bitwise-equal to a loop of ``dot`` calls."""
-    return _engine(scheme, unroll, interpret, mode,
+    return _engine(scheme, unroll, interpret,
                    compute_dtype).batched_dot(a, b)
 
 
 def batched_asum(x: jax.Array, *, scheme: SchemeSpec = None,
                  unroll: Optional[int] = None,
                  interpret: Optional[bool] = None,
-                 compute_dtype=None, mode: Optional[str] = None) -> jax.Array:
+                 compute_dtype=None) -> jax.Array:
     """[batch, n] -> [batch] compensated sums as ONE Pallas grid
     (batch, steps) — bitwise-equal to a loop of ``asum`` calls."""
-    return _engine(scheme, unroll, interpret, mode,
+    return _engine(scheme, unroll, interpret,
                    compute_dtype).batched_asum(x)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, block_m: Optional[int] = None,
            block_n: Optional[int] = None, block_k: Optional[int] = None,
            scheme: SchemeSpec = None, interpret: Optional[bool] = None,
-           compute_dtype=None, mode: Optional[str] = None) -> jax.Array:
+           compute_dtype=None) -> jax.Array:
     """C = A @ B with compensated inter-K-tile accumulation (compute-dtype
     accumulate and result). Pads M/N/K to block multiples and slices back;
     unset block sizes come from the resolved policy's ``blocks``.
     vmap-aware (``jax.vmap`` lands on the batched
     (batch, m_blocks, n_blocks, k_steps) grid) and differentiable (custom
     VJP whose backward matmuls reuse the compensated kernel)."""
-    return _engine(scheme, None, interpret, mode, compute_dtype).matmul(
+    return _engine(scheme, None, interpret, compute_dtype).matmul(
         a, b, block_m=block_m, block_n=block_n, block_k=block_k)
 
 
@@ -122,12 +113,11 @@ def batched_matmul(a: jax.Array, b: jax.Array, *,
                    block_k: Optional[int] = None,
                    scheme: SchemeSpec = None,
                    interpret: Optional[bool] = None,
-                   compute_dtype=None, mode: Optional[str] = None,
-                   ) -> jax.Array:
+                   compute_dtype=None) -> jax.Array:
     """[batch, M, K] x [batch, K, N] -> [batch, M, N] compensated matmuls
     as ONE Pallas grid (batch, m_blocks, n_blocks, k_steps) —
     bitwise-equal to a Python loop of ``matmul`` calls."""
-    return _engine(scheme, None, interpret, mode,
+    return _engine(scheme, None, interpret,
                    compute_dtype).batched_matmul(
         a, b, block_m=block_m, block_n=block_n, block_k=block_k)
 

@@ -13,9 +13,9 @@ the kernels (None resolves the ambient policy — fp32 by default), so the
 bitwise contract holds along the whole fp32 / f64 / bf16-accumulate axis.
 
 The accumulator merge policy is owned by ``repro.kernels.engine``;
-``merge_accumulators`` is re-exported here for back-compat. The
-deprecated ``mode=`` kwarg resolves through the registry (warning once
-per call site).
+``merge_accumulators`` is re-exported here for back-compat. (The legacy
+``mode`` alias was removed — see the migration note in
+``repro.kernels.schemes``.)
 """
 
 from __future__ import annotations
@@ -45,15 +45,12 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _resolve(scheme: SchemeSpec, mode: Optional[str],
-             stacklevel: int = 4) -> CompensationScheme:
-    return _schemes.resolve_scheme(
-        _schemes.resolve_legacy_mode(mode, scheme, stacklevel=stacklevel))
+def _resolve(scheme: SchemeSpec) -> CompensationScheme:
+    return _schemes.resolve_scheme(scheme)
 
 
 def dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
-            rows: int = 8, lanes: int = 128, *, compute_dtype=None,
-            mode: Optional[str] = None) -> jax.Array:
+            rows: int = 8, lanes: int = 128, *, compute_dtype=None) -> jax.Array:
     """Oracle for the dot kernels.
 
     Accumulation layout matches the kernel: data is viewed as
@@ -62,7 +59,7 @@ def dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
     the kernel body traces — bitwise by construction); accumulators are
     then merged with two-sum in the same tree order as the engine.
     """
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     cdt = _schemes.resolve_compute_dtype(compute_dtype)
     a = _pad_to(jnp.ravel(a).astype(cdt), rows * lanes)
     b = _pad_to(jnp.ravel(b).astype(cdt), rows * lanes)
@@ -81,10 +78,9 @@ def dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
 
 
 def sum_ref(x: jax.Array, scheme: SchemeSpec = None,
-            rows: int = 8, lanes: int = 128, *, compute_dtype=None,
-            mode: Optional[str] = None) -> jax.Array:
+            rows: int = 8, lanes: int = 128, *, compute_dtype=None) -> jax.Array:
     """Oracle for the sum kernels (single-stream dot with b == 1)."""
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     cdt = _schemes.resolve_compute_dtype(compute_dtype)
     x = _pad_to(jnp.ravel(x).astype(cdt), rows * lanes)
     xm = x.reshape(-1, rows, lanes)
@@ -101,35 +97,32 @@ def sum_ref(x: jax.Array, scheme: SchemeSpec = None,
 
 
 def batched_dot_ref(a: jax.Array, b: jax.Array, scheme: SchemeSpec = None,
-                    rows: int = 8, lanes: int = 128, *, compute_dtype=None,
-                    mode: Optional[str] = None) -> jax.Array:
+                    rows: int = 8, lanes: int = 128, *, compute_dtype=None) -> jax.Array:
     """Oracle for the batched dot grid: vmap of the single oracle over the
     leading batch axis — per row, the identical rounding sequence."""
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     fn = functools.partial(dot_ref, scheme=sch, rows=rows, lanes=lanes,
                            compute_dtype=compute_dtype)
     return jax.vmap(fn)(a, b)
 
 
 def batched_sum_ref(x: jax.Array, scheme: SchemeSpec = None,
-                    rows: int = 8, lanes: int = 128, *, compute_dtype=None,
-                    mode: Optional[str] = None) -> jax.Array:
+                    rows: int = 8, lanes: int = 128, *, compute_dtype=None) -> jax.Array:
     """Oracle for the batched sum grid (see ``batched_dot_ref``)."""
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     fn = functools.partial(sum_ref, scheme=sch, rows=rows, lanes=lanes,
                            compute_dtype=compute_dtype)
     return jax.vmap(fn)(x)
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
-               scheme: SchemeSpec = None, *, compute_dtype=None,
-               mode: Optional[str] = None) -> jax.Array:
+               scheme: SchemeSpec = None, *, compute_dtype=None) -> jax.Array:
     """Oracle for the matmul kernel: per-tile dot products folded across K
     tiles with ``scheme.update``, finalized with the shared ``s + c``.
 
     a: [M, K], b: [K, N] (any float dtype; accumulate in compute_dtype).
     """
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     cdt = _schemes.resolve_compute_dtype(compute_dtype)
     m, k = a.shape
     k2, n = b.shape
@@ -156,11 +149,10 @@ def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
 
 
 def batched_matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
-                       scheme: SchemeSpec = None, *, compute_dtype=None,
-                       mode: Optional[str] = None) -> jax.Array:
+                       scheme: SchemeSpec = None, *, compute_dtype=None) -> jax.Array:
     """Oracle for the batched matmul grid: vmap of ``matmul_ref`` over the
     leading batch axis — per index, the identical rounding sequence."""
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     fn = functools.partial(matmul_ref, bk=bk, scheme=sch,
                            compute_dtype=compute_dtype)
     return jax.vmap(fn)(a, b)
@@ -169,8 +161,8 @@ def batched_matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         scheme: SchemeSpec = None, *, block_q: int = 256,
                         block_k: int = 256, causal: bool = True,
-                        compute_dtype=None,
-                        mode: Optional[str] = None) -> jax.Array:
+                        q_groups: int = 1,
+                        compute_dtype=None) -> jax.Array:
     """BITWISE oracle for the flash-attention kernel under the engine
     contract.
 
@@ -183,13 +175,22 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     drifts by ~1 ulp) — so interpret-mode kernel output matches to the
     bit for every registered scheme. q: [BH, Sq, dh]; k/v: [BH, Skv, dh];
     returns [BH, Sq, dh] in the compute dtype.
+
+    ``q_groups``: GQA group factor G — k/v carry [BH // G, Skv, dh] and
+    the kernel's k/v BlockSpec index map reads block ``bh // G``; the
+    oracle replays that sharing by repeating each k/v head G times
+    (pure data movement, so the bitwise contract is untouched).
     """
     from repro.kernels import flash_attention as _flash
     from repro.kernels.flash_attention import NEG_INF
 
-    sch = _resolve(scheme, mode)
+    sch = _resolve(scheme)
     cdt = _schemes.resolve_compute_dtype(compute_dtype)
     bh, sq, dh = q.shape
+    if q_groups > 1:
+        assert k.shape[0] * q_groups == bh, (q.shape, k.shape, q_groups)
+        k = jnp.repeat(k, q_groups, axis=0)
+        v = jnp.repeat(v, q_groups, axis=0)
     skv = k.shape[1]
     block_q = min(block_q, _round_up(sq, 8))
     block_k = min(block_k, _round_up(skv, 128))

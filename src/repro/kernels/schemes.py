@@ -33,9 +33,6 @@ every call:
         ops.dot(a, b)            # dot2, unroll 4
         ops.batched_asum(x)      # same policy
 
-The legacy ``mode: str`` kwarg everywhere resolves through this registry
-(with a ``DeprecationWarning``) and returns bitwise-identical results.
-
 Registering a new scheme makes it usable through ``ops.dot`` /
 ``ops.asum`` / ``batched_*`` / ``sharded_*`` / ``matmul`` /
 ``flash_attention``, visible to the ECM model, and swept by the accuracy
@@ -51,7 +48,6 @@ import contextlib
 import contextvars
 import dataclasses
 import math
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -417,28 +413,17 @@ def use_policy(policy: Optional[Policy] = None, /, **overrides):
 
 
 # ---------------------------------------------------------------------------
-# Legacy ``mode=`` alias
+# Migration note: the legacy ``mode=`` alias is GONE
 # ---------------------------------------------------------------------------
-
-_MODE_DEPRECATION = (
-    "the 'mode=' kwarg is deprecated; pass scheme=<name|CompensationScheme> "
-    "or a Policy (repro.kernels.schemes) — mode strings resolve through the "
-    "same registry and return bitwise-identical results")
-
-
-def resolve_legacy_mode(mode: Optional[str],
-                        scheme: Union[str, CompensationScheme, None],
-                        stacklevel: int = 3,
-                        ) -> Union[str, CompensationScheme, None]:
-    """Fold a deprecated ``mode=`` kwarg into the ``scheme`` slot.
-
-    Warns (DeprecationWarning, attributed to the caller's caller by
-    default — internal repro call sites therefore trip the CI gate in
-    scripts/ci.sh) and returns the spec to use. Passing both is an error.
-    """
-    if mode is None:
-        return scheme
-    if scheme is not None:
-        raise TypeError("pass scheme= or the deprecated mode=, not both")
-    warnings.warn(_MODE_DEPRECATION, DeprecationWarning, stacklevel=stacklevel)
-    return mode
+# Through PR 3 every entry point accepted ``mode: str`` as a deprecated
+# alias for ``scheme=`` (registry-resolved, bitwise-identical results,
+# DeprecationWarning). The scripts/ci.sh gate kept repro.* internals
+# clean for two releases, so the alias has been REMOVED end-to-end:
+# ``ops.dot(a, b, mode="kahan", unroll=4)`` is now a TypeError — write
+# ``ops.dot(a, b, scheme="kahan", unroll=4)``, or set the policy once::
+#
+#     with use_policy(scheme="kahan", unroll=4):
+#         ops.dot(a, b)
+#
+# A grep gate in scripts/ci.sh fails CI if ``mode=`` reappears anywhere
+# in src/repro/.

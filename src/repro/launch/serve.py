@@ -1,39 +1,76 @@
-"""Serving launcher: batched generation over the model-zoo API.
+"""Serving launcher: request-trace driver over the continuous-batching
+engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        [--batch 4] [--new-tokens 32] [--stats] [--scheme kahan] \
-        [--unroll 8] [--compute-dtype float32]
+        --trace 0:32:16,1:8:4,3:24:8 [--max-slots 4] [--stats] \
+        [--scheme kahan] [--unroll 8] [--compute-dtype float32]
+
+``--trace`` replays a staggered-arrival request trace through
+``repro.serve.InferenceEngine``: a comma-separated list of
+``arrival:prompt_len:new_tokens[:temperature]`` cells, one per request
+(arrival measured in engine steps). Mixed prompt lengths and output
+lengths are the point — finished requests free their decode slot
+mid-flight and queued requests are prefilled into the gap. Without
+``--trace``, a uniform batch is synthesized from ``--batch`` /
+``--prompt-len`` / ``--new-tokens``.
 
 ``--stats`` turns on the compensated telemetry path: per-request squared
 logit norms computed with the engine's batched (batch, steps) Pallas grid
 (``models.layers.activation_sq_norm`` — the ``(s, c)`` accumulator
-contract with the deterministic two-sum merge), one kernel launch per
-decode step for the whole batch.
+contract with the deterministic two-sum merge), one launch per decode
+tick for the whole slot batch. A request's token AND telemetry trace are
+bitwise identical however the trace interleaves it with other traffic.
 
 ``--scheme`` picks any registered compensation scheme (naive / kahan /
 pairwise / dot2 / plugins) — the launcher builds ONE
-``repro.kernels.Policy`` and hands it to the server instead of threading
-``mode=``/``unroll=`` kwargs through the stack.
+``repro.kernels.Policy`` and hands it to ``EngineConfig.policy``.
 """
 
 import argparse
+from typing import List, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.kernels import Policy, schemes
-from repro.train import ServeConfig, Server
+from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
+
+
+def parse_trace(spec: str, default_temp: float,
+                ) -> List[Tuple[int, int, int, float]]:
+    """'arrival:prompt_len:new_tokens[:temperature],...' -> tuples."""
+    cells = []
+    for cell in spec.split(","):
+        parts = cell.strip().split(":")
+        if len(parts) not in (3, 4):
+            raise ValueError(
+                f"trace cell {cell!r}: want arrival:prompt_len:new_tokens"
+                "[:temperature]")
+        arrival, plen, new = (int(p) for p in parts[:3])
+        temp = float(parts[3]) if len(parts) == 4 else default_temp
+        cells.append((arrival, plen, new, temp))
+    return cells
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", default="",
+                    help="request trace: arrival:prompt_len:new_tokens"
+                         "[:temperature], comma-separated; empty -> a "
+                         "uniform batch from --batch/--prompt-len/"
+                         "--new-tokens, all arriving at step 0")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="decode batch width (concurrent requests)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-slot cache capacity; 0 -> fit the trace")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="prompt-content RNG seed")
     ap.add_argument("--stats", action="store_true",
                     help="print compensated per-request logit norms")
     ap.add_argument("--scheme", default="kahan",
@@ -49,30 +86,53 @@ def main():
                          "unsupported dtypes fail fast with the menu)")
     args = ap.parse_args()
 
+    if args.trace:
+        cells = parse_trace(args.trace, args.temperature)
+    else:
+        cells = [(0, args.prompt_len, args.new_tokens, args.temperature)
+                 for _ in range(args.batch)]
+
     policy = Policy(scheme=args.scheme, unroll=args.unroll,
                     compute_dtype=args.compute_dtype)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    server = Server(cfg, ServeConfig(temperature=args.temperature,
-                                     track_stats=args.stats,
-                                     policy=policy))
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.vision is not None:
-        batch["vision_embeds"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.vision.n_patches, cfg.d_model)), jnp.float32)
-    if cfg.encoder is not None:
-        batch["frames"] = jnp.asarray(rng.standard_normal(
-            (args.batch, cfg.encoder.n_frames, cfg.d_model)), jnp.float32)
-    out = server.generate(batch, args.new_tokens)
-    for i, row in enumerate(np.asarray(out)):
-        print(f"request {i}: {row.tolist()}")
-    if args.stats and server.last_stats:
-        norms = np.stack([np.asarray(s) for s in server.last_stats])  # [T,B]
-        for i in range(norms.shape[1]):
-            print(f"request {i}: |logits|^2 ({args.scheme}) "
-                  f"first={norms[0, i]:.6e} last={norms[-1, i]:.6e}")
+    max_len = args.max_len or max(p + n for _, p, n, _ in cells)
+
+    rng = np.random.default_rng(args.seed)
+    requests, arrivals = [], []
+    for arrival, plen, new, temp in cells:
+        extras = {}
+        if cfg.vision is not None:
+            extras["vision_embeds"] = rng.standard_normal(
+                (cfg.vision.n_patches, cfg.d_model)).astype(np.float32)
+        if cfg.encoder is not None:
+            extras["frames"] = rng.standard_normal(
+                (cfg.encoder.n_frames, cfg.d_model)).astype(np.float32)
+        # request_id pinned to the trace-cell index: submission order is
+        # arrival-sorted, so auto-assigned ids would misalign the final
+        # per-request report with its cell for out-of-order traces.
+        requests.append(Request(
+            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            sampling=SamplingParams(temperature=temp, max_new_tokens=new),
+            request_id=len(requests), extras=extras or None))
+        arrivals.append(arrival)
+
+    engine = InferenceEngine(
+        cfg, EngineConfig(max_slots=args.max_slots, max_len=max_len,
+                          track_stats=args.stats, policy=policy))
+    for t, events in engine.stream(requests, arrivals):
+        emitted = ", ".join(
+            f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
+            for e in events)
+        print(f"# step {t:3d} occupancy={engine.scheduler.occupancy} "
+              f"queued={engine.scheduler.queued}  {emitted}")
+
+    for rid, h in sorted(engine.handles.items()):
+        arrival, plen, new, temp = cells[rid]
+        print(f"request {rid} (arrived t={arrival}, prompt={plen}, "
+              f"new={new}, temp={temp}): {h.tokens}")
+        if args.stats and h.telemetry:
+            print(f"request {rid}: |logits|^2 ({args.scheme}) "
+                  f"first={h.telemetry[0]:.6e} last={h.telemetry[-1]:.6e}")
 
 
 if __name__ == "__main__":

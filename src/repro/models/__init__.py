@@ -1,3 +1,4 @@
 """Model zoo: functional layers + per-family LM assemblies."""
 
+from repro.models.common import cache_batch_axes  # noqa: F401
 from repro.models.model_zoo import build_model  # noqa: F401

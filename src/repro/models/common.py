@@ -45,6 +45,34 @@ def stack_specs(spec_tree: Params) -> Params:
                         is_leaf=lambda s: isinstance(s, P))
 
 
+def cache_batch_axes(cache_specs: Params) -> Params:
+    """Per-leaf index of the request ("batch") axis in a decode cache.
+
+    Every model's ``init_cache`` returns ``(cache, specs)`` with a
+    matching tree of logical PartitionSpecs, and every cache leaf marks
+    its request dimension with the logical axis name ``"batch"`` —
+    stacked (scan-over-layers) leaves carry it one position deeper, ring
+    buffers and recurrent SSM/xLSTM states wherever their layout puts
+    it. This helper turns those specs into a pytree of ints (same
+    structure as the cache), which is the slot-addressing contract the
+    serving engine builds on: ``repro.serve.slots`` uses it both as the
+    scatter axis for per-slot cache writes/resets and as the ``vmap``
+    in/out axes for the per-slot decode tick. Leaves that do not mark a
+    batch axis fail fast here, at engine construction — never inside a
+    trace.
+    """
+    def one(sp: P) -> int:
+        for i, name in enumerate(sp):
+            if name == "batch" or (isinstance(name, tuple) and "batch" in name):
+                return i
+        raise ValueError(
+            f"cache spec {sp} does not mark a 'batch' axis; every cache "
+            "leaf must be slot-addressable for request-level serving")
+
+    return jax.tree.map(one, cache_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
 # ---------------------------------------------------------------------------
 # Compensated chunked cross-entropy
 # ---------------------------------------------------------------------------

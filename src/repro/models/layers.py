@@ -201,29 +201,24 @@ def _flash_core(qg: jax.Array, k: jax.Array, v: jax.Array,
                 compute_dtype) -> jax.Array:
     """Grouped-query attention through the engine's fused flash kernel.
 
-    qg: [B, Sq, KV, G, dh]; k/v: [B, Skv, KV, dh]. KV heads broadcast
-    across the G query groups and (batch, heads) flatten into the
-    kernel's leading BH grid dimension — the batched entry point. The
-    engine owns padding / promotion / the compensated online-softmax
+    qg: [B, Sq, KV, G, dh]; k/v: [B, Skv, KV, dh]. Query head-rows
+    flatten [batch, kv_head, group]-major into the kernel's leading BH
+    grid dimension; k/v flatten [batch, kv_head]-major ONCE and each k/v
+    head is shared across its G query groups by the kernel's BlockSpec
+    index map (``bh // G``) — the group duplication never leaves the
+    index map, so prefill KV traffic stays at 1/G of the broadcast form.
+    The engine owns padding / promotion / the compensated online-softmax
     accumulators (ambient Policy selects scheme + accumulate dtype).
     Causal, full-window only — callers guard.
-
-    NOTE: the broadcast materializes G copies of K/V (G = query groups
-    per KV head) — acceptable for the validation/telemetry routing this
-    knob serves, but a production GQA path should instead map the
-    kernel's k/v BlockSpec index with ``bh // G`` so duplication never
-    leaves the index map (ROADMAP: flash backward + GQA index map).
     """
     from repro.kernels.flash_attention import flash_attention as _flash
 
     b, sq, kvh, g, dh = qg.shape
     skv = k.shape[1]
     qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, sq, dh)
-    kf = jnp.broadcast_to(k[:, :, :, None, :], (b, skv, kvh, g, dh))
-    kf = kf.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, skv, dh)
-    vf = jnp.broadcast_to(v[:, :, :, None, :], (b, skv, kvh, g, dh))
-    vf = vf.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, skv, dh)
-    out = _flash(qf, kf, vf, causal=True)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    out = _flash(qf, kf, vf, causal=True, q_groups=g)
     out = out.reshape(b, kvh, g, sq, dh).transpose(0, 3, 1, 2, 4)
     return out.astype(compute_dtype)
 
@@ -577,8 +572,7 @@ def mlp_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
 
 def activation_sq_norm(x: jax.Array, *, scheme=None, mesh=None,
                        axis: str = "data",
-                       interpret: Optional[bool] = None,
-                       mode: Optional[str] = None) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """Per-request compensated squared L2 norm of an activation tensor.
 
     ``x``: [B, ...] (logits, hidden states). Returns [B] fp32 via the
@@ -589,7 +583,6 @@ def activation_sq_norm(x: jax.Array, *, scheme=None, mesh=None,
 
     ``scheme``: registered compensation-scheme name / CompensationScheme
     / Policy; None resolves the ambient ``schemes.use_policy`` default.
-    ``mode=`` is the deprecated alias (registry-resolved, warns).
 
     With ``mesh``/``axis`` given, ``x`` is treated as batch-sharded over
     that mesh axis and each device reduces only its local requests; the
@@ -598,10 +591,8 @@ def activation_sq_norm(x: jax.Array, *, scheme=None, mesh=None,
     ``repro.distributed.collectives.sharded_asum``, which all-gathers the
     (s, c) grids and applies the deterministic two-sum tree.
     """
-    from repro.kernels import schemes as _schemes
     from repro.kernels.engine import CompensatedReduction
 
-    scheme = _schemes.resolve_legacy_mode(mode, scheme)
     eng = CompensatedReduction(scheme=scheme, interpret=interpret)
     flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
     sq = flat * flat

@@ -1,0 +1,27 @@
+"""Request-level serving: continuous batching over the model zoo.
+
+  engine.py     — ``InferenceEngine``: submit(Request) -> RequestHandle,
+                  step() (fused prefill-admit + decode tick), run/stream;
+                  per-request sampling keys via fold_in; ONE Policy for
+                  every compensated reduction; bitwise solo-vs-batched
+                  determinism (see the engine docstring for the contract
+                  and the mechanisms that carry it).
+  scheduler.py  — Request / SamplingParams / RequestHandle and the
+                  deterministic FIFO + lowest-free-slot scheduler.
+  slots.py      — ``SlotKVCache``: the fixed-width slot cache, with
+                  per-leaf request axes derived from the models' cache
+                  specs (``repro.models.cache_batch_axes``).
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    EngineConfig,
+    InferenceEngine,
+    TokenEvent,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    Request,
+    RequestHandle,
+    SamplingParams,
+    SlotScheduler,
+)
+from repro.serve.slots import SlotKVCache  # noqa: F401

@@ -1,0 +1,377 @@
+"""Request-level continuous-batching inference engine.
+
+``InferenceEngine`` replaces the lock-step batch decoder with a
+request-level API::
+
+    engine = InferenceEngine(cfg, EngineConfig(max_slots=8, max_len=512))
+    handle = engine.submit(Request(prompt=[3, 1, 4], sampling=SamplingParams(
+        temperature=0.7, max_new_tokens=32)))
+    while not handle.done:
+        engine.step()                 # one fused prefill-admit + decode tick
+    print(handle.tokens, handle.telemetry)
+
+Scheduling model: a fixed decode batch of ``max_slots`` per-slot caches
+(``repro.serve.slots``). Each ``step()`` first admits queued requests
+into free slots — one single-request prefill each, scattered into the
+slot — then runs ONE decode tick over the whole slot batch; finished
+requests free their slot mid-flight for the next step's admissions.
+
+THE NUMERICS CONTRACT (the serving-layer analogue of the engine's
+batched-vs-loop guarantee): a request's emitted tokens and its
+compensated logit-norm telemetry are BITWISE IDENTICAL whether it runs
+alone or interleaved with arbitrary other traffic, for every registered
+compensation scheme. Three mechanisms carry it:
+
+* the decode tick maps ONE single-request decode body over the slot
+  axis (per-slot cache row, token, position, sampling key) — by default
+  as a ``lax.scan`` whose body compiles ONCE, so every slot executes
+  the identical instruction (and rounding) sequence regardless of which
+  slot a request landed in. This is the serving-layer form of the
+  kernels' shared-block-body technique: ``jax.vmap`` keeps per-slot
+  math row-independent in exact arithmetic, but XLA's fusion autotuning
+  may vectorize different batch rows through different code paths
+  (measured: ~1-ulp logit drift between slot 0 and slot 1 on the hybrid
+  SSM decode), which would leak a request's slot placement into its
+  bits. ``EngineConfig.slot_loop="vmap"`` opts into the fully parallel
+  tick for throughput work that doesn't need the bitwise guarantee.
+  Either way the body is traced at batch 1, so even batch-coupled
+  layers like MoE capacity routing are row-local, and the tick width is
+  always ``max_slots`` — a solo request runs the very same compiled
+  program as a full house;
+* prefill always runs at batch 1 (one admit per request), so its
+  program depends only on the request's own prompt;
+* sampling keys fold from per-request state only
+  (``fold_in(fold_in(engine_key, request.seed), emit_index)``), and the
+  per-request telemetry reduction runs on the engine's batched
+  ``(batch, steps)`` grid with the deterministic two-sum merge, which is
+  row-wise bitwise-equal to a per-request loop (PR 1's contract).
+
+ONE ``repro.kernels.Policy`` (``EngineConfig.policy``) selects the
+compensation scheme / unroll / accumulate dtype for everything the
+engine computes — the telemetry norms here, and the model's own
+projections / prefill attention when ``ArchConfig.kahan_matmul`` /
+``kahan_attention`` route them through the kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import schemes as _schemes
+from repro.kernels.schemes import Policy, use_policy
+from repro.models import build_model
+from repro.serve.scheduler import (
+    Request,
+    RequestHandle,
+    SamplingParams,
+    SlotScheduler,
+)
+from repro.serve.slots import SlotKVCache, _donate
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-level (not per-request) serving configuration.
+
+    max_slots    decode batch width: concurrent requests served per tick
+    max_len      per-slot cache capacity (prompt + generated tokens)
+    track_stats  record the compensated squared logit norm per emitted
+                 token (the per-request telemetry trace)
+    policy       ONE Policy for every compensated reduction the engine
+                 runs; None captures the ambient ``use_policy`` default
+                 at engine construction
+    sample_seed  seed of the engine-level sampling key; per-request
+                 streams fold their ``SamplingParams.seed`` into it
+    slot_loop    how the decode tick maps the single-request body over
+                 slots: "scan" (default — one traced body, identical
+                 rounding per slot, carries the bitwise contract) or
+                 "vmap" (fully parallel rows; bitwise slot-placement
+                 invariance is then up to the backend's vectorizer)
+    """
+
+    max_slots: int = 4
+    max_len: int = 512
+    track_stats: bool = False
+    policy: Optional[Policy] = None
+    sample_seed: int = 0
+    slot_loop: str = "scan"
+
+    def __post_init__(self):
+        if self.slot_loop not in ("scan", "vmap"):
+            raise ValueError(
+                f"slot_loop must be 'scan' or 'vmap', got {self.slot_loop!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One emitted token, as surfaced by ``step()`` / ``stream()``."""
+
+    request_id: int
+    token: int
+    norm: Optional[float]    # compensated |logits|^2 (None if not tracked)
+    done: bool
+
+
+def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
+                  batch_axes):
+    """Build (or fetch) the jitted admit / decode-tick callables.
+
+    Cached ON the model object keyed by the engine signature, so several
+    engines over the same model instance (e.g. a solo-replay engine next
+    to the serving engine in the determinism tests) share compiled code.
+    """
+    key = ("serve", ec.max_slots, ec.max_len, ec.track_stats,
+           ec.sample_seed, ec.slot_loop, policy)
+    cache = model.__dict__.setdefault("_serve_compiled", {})
+    if key in cache:
+        return cache[key]
+
+    vocab = cfg.vocab_size
+    base_key = jax.random.key(ec.sample_seed)
+
+    def sample_row(logits_row, key, temp):
+        """Per-request sampling: greedy at temp<=0, categorical above.
+        Purely row-local (one key, one logit row) — both branches are
+        computed and selected so the traced program is temp-agnostic."""
+        greedy = jnp.argmax(logits_row).astype(jnp.int32)
+        safe_t = jnp.where(temp > 0, temp, jnp.float32(1.0))
+        samp = jax.random.categorical(
+            key, logits_row.astype(jnp.float32) / safe_t).astype(jnp.int32)
+        return jnp.where(temp > 0, samp, greedy)
+
+    def _norms(logits):
+        """[B, V_pad] -> [B] compensated squared logit norms on the
+        engine's batched (batch, steps) grid. Valid-vocab slice only:
+        the padded region carries a -1e30 mask bias whose square
+        overflows fp32."""
+        from repro.models.layers import activation_sq_norm
+
+        return activation_sq_norm(logits[:, :vocab], scheme=policy)
+
+    def decode_one(params, cache_row, token, pos, seed, eidx, temp):
+        """ONE request's decode step — the unit vmap maps over slots.
+        Re-inserts the request axis (size 1) per cache leaf, runs the
+        model's own decode_step, samples with the request's folded key.
+        """
+        cache1 = jax.tree.map(lambda x, a: jnp.expand_dims(x, a),
+                              cache_row, batch_axes)
+        logits, new_cache = model.decode_step(params, cache1, token[None],
+                                              pos)
+        new_row = jax.tree.map(lambda x, a: jnp.squeeze(x, a),
+                               new_cache, batch_axes)
+        k = jax.random.fold_in(jax.random.fold_in(base_key, seed), eidx)
+        tok = sample_row(logits[0], k, temp)
+        return logits[0], new_row, tok
+
+    if ec.slot_loop == "vmap":
+        decode_slots = jax.vmap(decode_one,
+                                in_axes=(None, batch_axes, 0, 0, 0, 0, 0),
+                                out_axes=(0, batch_axes, 0))
+    else:
+        def decode_slots(params, cache, tokens, pos, seeds, eidx, temps):
+            # ONE traced body scanned over the slot axis: every slot runs
+            # the identical rounding sequence, so a request's bits cannot
+            # depend on which slot the scheduler gave it (vmap leaves
+            # that to the backend vectorizer — see the module docstring).
+            front = jax.tree.map(lambda x, a: jnp.moveaxis(x, a, 0),
+                                 cache, batch_axes)
+
+            def body(_, xs):
+                row, token, p, seed, ei, temp = xs
+                out = decode_one(params, row, token, p, seed, ei, temp)
+                return None, out
+
+            _, (logits, new_front, toks) = jax.lax.scan(
+                body, None, (front, tokens, pos, seeds, eidx, temps))
+            new_cache = jax.tree.map(lambda x, a: jnp.moveaxis(x, 0, a),
+                                     new_front, batch_axes)
+            return logits, new_cache, toks
+
+    @functools.partial(jax.jit, donate_argnums=tuple(
+        1 + i for i in _donate()))
+    def tick(params, cache, tokens, pos, seeds, eidx, temps):
+        with use_policy(policy):
+            logits, new_cache, next_tok = decode_slots(
+                params, cache, tokens, pos, seeds, eidx, temps)
+            norms = (_norms(logits) if ec.track_stats
+                     else jnp.zeros((ec.max_slots,), jnp.float32))
+        return new_cache, next_tok, norms
+
+    @jax.jit
+    def admit(params, batch, seed, temp):
+        """Fused prefill-admit: build a pristine single-request cache
+        in-trace, prefill the prompt, sample emit 0 from the prefill
+        logits. Always batch 1 — the program depends only on the
+        request's own prompt length."""
+        with use_policy(policy):
+            row, _ = model.init_cache(1, ec.max_len)
+            logits, row = model.prefill(params, batch, row)     # [1, V_pad]
+            k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
+                                   jnp.int32(0))
+            tok = sample_row(logits[0], k, temp)
+            norm = (_norms(logits)[0] if ec.track_stats
+                    else jnp.float32(0.0))
+        return row, tok, norm
+
+    fns = (admit, tick)
+    cache[key] = fns
+    return fns
+
+
+class InferenceEngine:
+    """Continuous-batching serving engine over the model-zoo API.
+
+    ``model`` / ``params`` may be passed in to share one set of weights
+    across engines (the determinism tests replay requests solo against
+    the same weights the loaded engine serves).
+    """
+
+    def __init__(self, cfg: ArchConfig, ec: EngineConfig = EngineConfig(),
+                 seed: int = 0, model=None, params=None):
+        self.cfg = cfg
+        self.ec = ec
+        # capture ONE policy at construction; later ambient changes
+        # don't silently renumber the engine.
+        self.policy = (ec.policy if ec.policy is not None
+                       else _schemes.current_policy())
+        self.model = model if model is not None else build_model(cfg)
+        if params is None:
+            params, _ = self.model.init(jax.random.key(seed))
+        self.params = params
+        self.slots = SlotKVCache(self.model, ec.max_slots, ec.max_len)
+        self.scheduler = SlotScheduler(ec.max_slots)
+        self._admit_fn, self._tick_fn = _compiled_fns(
+            self.model, cfg, ec, self.policy, self.slots.batch_axes)
+        self._next_id = 0
+        self.t = 0                       # engine step counter
+        self.handles: Dict[int, RequestHandle] = {}
+
+    # ------------------------------------------------------------ submission
+    def submit(self, request: Request) -> RequestHandle:
+        """Queue a request; returns its live handle immediately."""
+        rid = request.request_id
+        if rid is None:
+            rid = self._next_id
+        if rid in self.handles:
+            raise ValueError(f"request_id {rid} already submitted")
+        self._next_id = max(self._next_id, rid) + 1
+        if request.sampling.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        prompt_len = int(np.asarray(request.prompt).shape[0])
+        if prompt_len + request.sampling.max_new_tokens - 1 > self.ec.max_len:
+            raise ValueError(
+                f"request {rid}: prompt_len={prompt_len} + "
+                f"max_new_tokens={request.sampling.max_new_tokens} exceeds "
+                f"the engine's max_len={self.ec.max_len}")
+        handle = RequestHandle(request_id=rid, request=request)
+        self.handles[rid] = handle
+        self.scheduler.submit(handle)
+        return handle
+
+    def _batch_for(self, request: Request) -> Dict[str, jax.Array]:
+        batch = {"tokens": jnp.asarray(np.asarray(request.prompt),
+                                       jnp.int32)[None, :]}
+        for k, v in (request.extras or {}).items():
+            batch[k] = jnp.asarray(v)[None]
+        return batch
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[TokenEvent]:
+        """One engine tick: admit queued requests into free slots (one
+        batch-1 prefill each, emitting the request's first token), then
+        one vmapped decode tick over the whole slot batch. Returns the
+        tokens emitted this step, admission order first."""
+        events: List[TokenEvent] = []
+        sch = self.scheduler
+
+        # -- fused prefill-admit ------------------------------------------
+        while sch.can_admit():
+            h = sch.admit_next()
+            sp = h.request.sampling
+            row, tok, norm = self._admit_fn(
+                self.params, self._batch_for(h.request),
+                jnp.asarray(h.seed, jnp.int32),
+                jnp.asarray(sp.temperature, jnp.float32))
+            self.slots.write(h.slot, row)
+            h.pos = int(np.asarray(h.request.prompt).shape[0])
+            self._record(h, int(tok), norm, events)
+
+        # -- decode tick over the slot batch ------------------------------
+        running = sch.running
+        if running:
+            b = self.ec.max_slots
+            tokens = np.zeros((b,), np.int32)
+            pos = np.zeros((b,), np.int32)
+            seeds = np.zeros((b,), np.int32)
+            eidx = np.zeros((b,), np.int32)
+            temps = np.zeros((b,), np.float32)
+            for slot, h in running.items():
+                tokens[slot] = h.tokens[-1]
+                pos[slot] = h.pos
+                seeds[slot] = h.seed
+                eidx[slot] = h.emitted
+                temps[slot] = h.request.sampling.temperature
+            new_cache, next_tok, norms = self._tick_fn(
+                self.params, self.slots.cache, jnp.asarray(tokens),
+                jnp.asarray(pos), jnp.asarray(seeds), jnp.asarray(eidx),
+                jnp.asarray(temps))
+            self.slots.cache = new_cache
+            toks = np.asarray(next_tok)
+            norms = np.asarray(norms)
+            for slot, h in running.items():
+                h.pos += 1
+                self._record(h, int(toks[slot]), norms[slot], events)
+
+        self.t += 1
+        return events
+
+    def _record(self, h: RequestHandle, token: int, norm,
+                events: List[TokenEvent]) -> None:
+        h.tokens.append(token)
+        h.emitted += 1
+        nval = None
+        if self.ec.track_stats:
+            # float() of an fp32 is exact — the telemetry trace keeps
+            # its bits for the solo-vs-batched comparison.
+            nval = float(np.float32(norm))
+            h.telemetry.append(nval)
+        done = h.remaining == 0
+        if done:
+            slot = self.scheduler.release(h)
+            self.slots.reset(slot)      # eviction hook: no stale state
+        events.append(TokenEvent(h.request_id, token, nval, done))
+
+    # ------------------------------------------------------------ driving
+    def stream(self, requests: Sequence[Request] = (),
+               arrivals: Optional[Sequence[int]] = None,
+               ) -> Iterator[Tuple[int, List[TokenEvent]]]:
+        """Drive a trace to completion, yielding ``(step, events)`` per
+        tick. ``arrivals[i]`` is the engine step at which ``requests[i]``
+        arrives (default: all at step 0) — the staggered-arrival replay
+        surface the trace driver and the determinism tests build on."""
+        arr = [0] * len(requests) if arrivals is None else list(arrivals)
+        if len(arr) != len(requests):
+            raise ValueError("arrivals must match requests")
+        pending = sorted(range(len(requests)), key=lambda i: (arr[i], i))
+        while pending or self.scheduler.busy:
+            while pending and arr[pending[0]] <= self.t:
+                self.submit(requests[pending.pop(0)])
+            yield self.t, self.step()
+
+    def run(self, requests: Sequence[Request] = (),
+            arrivals: Optional[Sequence[int]] = None,
+            ) -> Dict[int, RequestHandle]:
+        """Submit ``requests`` (staggered by ``arrivals``, in engine
+        steps) plus anything already queued, and step until drained.
+        Returns ``request_id -> handle`` for every request the engine
+        has served."""
+        for _ in self.stream(requests, arrivals):
+            pass
+        return dict(self.handles)

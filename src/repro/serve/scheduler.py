@@ -1,0 +1,157 @@
+"""Request objects + the slot-based continuous-batching scheduler.
+
+The scheduling layer is deliberately plain Python (no jax): it decides
+WHICH request occupies WHICH decode slot WHEN, and nothing it decides may
+change a request's numerics — the bitwise solo-vs-batched contract in
+``repro.serve.engine`` depends on every per-request quantity (prompt,
+sampling key, emit indices, cache row) being independent of the
+scheduler's choices. Keeping the scheduler free of array code makes that
+separation auditable.
+
+Admission policy: FIFO over arrival order, lowest free slot first — both
+deterministic, so a replayed trace schedules identically.
+"""
+
+from __future__ import annotations
+
+import bisect
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional
+
+#: request lifecycle states
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature     0 = greedy argmax; > 0 samples categorically from
+                    ``logits / temperature``
+    max_new_tokens  tokens to emit (the first comes from prefill logits)
+    seed            per-request RNG stream selector: the engine draws
+                    every sampling key from
+                    ``fold_in(fold_in(engine_key, seed), emit_index)``.
+                    None -> the request_id, so distinct requests get
+                    distinct streams by default and a replayed request
+                    (same id) gets the same stream.
+    """
+
+    temperature: float = 0.0
+    max_new_tokens: int = 16
+    seed: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    prompt      token ids, shape [S] (list / numpy / jax array)
+    sampling    per-request SamplingParams
+    request_id  stable int identity; None -> assigned by the engine
+                (submission order). Also the default sampling stream.
+    extras      extra prefill inputs for multimodal archs, UNBATCHED —
+                e.g. ``{"vision_embeds": [n_patches, d]}`` or
+                ``{"frames": [n_frames, d]}``; the engine adds the
+                leading request axis.
+    """
+
+    prompt: Any
+    sampling: SamplingParams = SamplingParams()
+    request_id: Optional[int] = None
+    extras: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """Mutable per-request state, returned by ``engine.submit``.
+
+    tokens     emitted token ids (grows once per engine step while running)
+    telemetry  compensated squared logit norm per emitted token (fp32
+               bits preserved; populated when the engine tracks stats)
+    """
+
+    request_id: int
+    request: Request
+    status: str = QUEUED
+    slot: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    telemetry: List[float] = dataclasses.field(default_factory=list)
+    # engine-internal decode bookkeeping (valid while RUNNING)
+    pos: int = 0          # next cache write position (= prompt_len + emitted - 1)
+    emitted: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    @property
+    def remaining(self) -> int:
+        return self.request.sampling.max_new_tokens - self.emitted
+
+    @property
+    def seed(self) -> int:
+        s = self.request.sampling.seed
+        return self.request_id if s is None else s
+
+
+class SlotScheduler:
+    """Continuous-batching slot allocator: a fixed decode batch of
+    ``max_slots`` rows; finished requests free their slot and queued
+    requests are prefilled into free slots mid-flight.
+    """
+
+    def __init__(self, max_slots: int):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.max_slots = max_slots
+        self._free: List[int] = list(range(max_slots))   # sorted ascending
+        self._queue: Deque[RequestHandle] = collections.deque()
+        self._running: Dict[int, RequestHandle] = {}     # slot -> handle
+
+    # ------------------------------------------------------------- admission
+    def submit(self, handle: RequestHandle) -> None:
+        handle.status = QUEUED
+        self._queue.append(handle)
+
+    def can_admit(self) -> bool:
+        return bool(self._free) and bool(self._queue)
+
+    def admit_next(self) -> RequestHandle:
+        """Pop the oldest queued request into the lowest free slot."""
+        slot = self._free.pop(0)
+        handle = self._queue.popleft()
+        handle.status = RUNNING
+        handle.slot = slot
+        self._running[slot] = handle
+        return handle
+
+    # -------------------------------------------------------------- release
+    def release(self, handle: RequestHandle) -> int:
+        """Mark finished and free its slot (returned, for cache reset)."""
+        slot = handle.slot
+        assert slot is not None and self._running.get(slot) is handle
+        del self._running[slot]
+        bisect.insort(self._free, slot)
+        handle.status = FINISHED
+        handle.slot = None
+        return slot
+
+    # ------------------------------------------------------------- queries
+    @property
+    def running(self) -> Dict[int, RequestHandle]:
+        """slot -> handle for every occupied slot (insertion order)."""
+        return dict(self._running)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._running) or bool(self._queue)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._running)

@@ -1,0 +1,89 @@
+"""Slot-addressed KV/recurrent cache for the continuous-batching engine.
+
+One cache pytree with a fixed request axis of ``max_slots`` rows, built
+by the model's own ``init_cache`` — KV tensors for attention layers,
+ring buffers for sliding-window layers, SSM / xLSTM recurrent state for
+the subquadratic families. Which dimension of each leaf is the request
+axis comes from the model's cache specs via
+``repro.models.cache_batch_axes`` — the models' slot-addressing hook —
+so this module needs no per-family knowledge.
+
+Three jitted operations, all expressed per-leaf along that axis:
+
+* ``write`` — scatter a freshly prefilled single-request cache into a
+  slot (``dynamic_update_slice`` at a traced slot index, so admitting
+  into slot 0 and slot 7 share one compiled program);
+* ``reset`` — restore a slot to the model's pristine init row (rebuilt
+  in-trace from ``init_cache(1, ...)``), run on eviction so a freed slot
+  never carries stale state;
+* ``batch_axes`` — the same pytree of ints doubles as the ``vmap``
+  in/out axes of the engine's decode tick.
+
+Both mutators donate the big cache, so slot writes are in-place
+buffer updates, not O(max_slots) copies.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cache_batch_axes
+
+
+def _update_leaf(big: jax.Array, row: jax.Array, axis: int, slot) -> jax.Array:
+    starts = [jnp.int32(0)] * big.ndim
+    starts[axis] = slot
+    return jax.lax.dynamic_update_slice(big, row.astype(big.dtype),
+                                        tuple(starts))
+
+
+def _donate():
+    # buffer donation is a no-op (plus a warning) on CPU; only request it
+    # where the runtime honors it.
+    return (0,) if jax.default_backend() != "cpu" else ()
+
+
+class SlotKVCache:
+    """Fixed-batch slot cache over a model-zoo cache pytree."""
+
+    def __init__(self, model, max_slots: int, max_len: int):
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache, self.specs = model.init_cache(max_slots, max_len)
+        #: pytree of ints (cache structure): the request axis per leaf —
+        #: scatter axis here, vmap in/out axes in the engine tick.
+        self.batch_axes = cache_batch_axes(self.specs)
+
+        axes = self.batch_axes
+
+        @functools.partial(jax.jit, donate_argnums=_donate())
+        def _write(cache, row_cache, slot):
+            return jax.tree.map(
+                lambda big, row, ax: _update_leaf(big, row, ax, slot),
+                cache, row_cache, axes)
+
+        @functools.partial(jax.jit, donate_argnums=_donate())
+        def _reset(cache, slot):
+            row, _ = model.init_cache(1, max_len)
+            return jax.tree.map(
+                lambda big, r, ax: _update_leaf(big, r, ax, slot),
+                cache, row, axes)
+
+        self._write = _write
+        self._reset = _reset
+
+    def write(self, slot: int, row_cache: Any) -> None:
+        """Install a single-request cache (leaves sized 1 on the request
+        axis — e.g. fresh from a prefill) into ``slot``."""
+        self.cache = self._write(self.cache, row_cache,
+                                 jnp.asarray(slot, jnp.int32))
+
+    def reset(self, slot: int) -> None:
+        """Return ``slot`` to the model's pristine init state (eviction
+        hook — freed slots never leak a previous request's state)."""
+        self.cache = self._reset(self.cache, jnp.asarray(slot, jnp.int32))

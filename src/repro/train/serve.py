@@ -1,22 +1,39 @@
-"""Batched serving loop: prefill + decode with KV caches.
+"""DEPRECATED lock-step serving shim over ``repro.serve.InferenceEngine``.
 
-``Server`` is the single-host driver used by examples/serve_batched.py and
-the serving integration tests; ``make_prefill_step`` / ``make_decode_step``
+``Server.generate`` predates request-level serving: every request had to
+arrive together, share one prompt length, and leave together. The
+continuous-batching engine in ``repro.serve`` subsumes it — per-request
+arrival, prompt length, sampling, and telemetry, with bitwise
+solo-vs-batched determinism. This module keeps the old surface alive as
+a thin adapter (one ``Request`` per batch row, ``max_slots = batch``)
+for existing callers and emits a ``DeprecationWarning`` pointing at the
+new API. New code should use ``repro.serve.InferenceEngine`` directly.
+
+``make_prefill_step`` / ``make_decode_step`` remain first-class: they
 are the jit-able functions the dry-run lowers for the decode_*/prefill_*
-shape cells.
+shape cells (``repro.launch.specs``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import warnings
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.kernels.schemes import Policy
 from repro.models import build_model
+from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
+
+_SERVER_DEPRECATION = (
+    "repro.train.serve.Server is deprecated: it serves lock-step batches "
+    "only. Use repro.serve.InferenceEngine (request-level continuous "
+    "batching, per-request SamplingParams, bitwise solo-vs-batched "
+    "determinism) instead.")
 
 
 def make_prefill_step(model) -> Callable:
@@ -39,55 +56,62 @@ class ServeConfig:
     temperature: float = 0.0     # 0 = greedy
     track_stats: bool = False    # compensated per-request logit telemetry
     # ONE policy object for every compensated reduction the server runs
-    # (telemetry norms here; with ``ArchConfig.kahan_matmul`` /
-    # ``kahan_attention`` the model's own projections and prefill
-    # attention also resolve through the ambient policy).
-    # None -> the ambient ``repro.kernels.use_policy`` default.
+    # (None -> the ambient ``repro.kernels.use_policy`` default); handed
+    # through to ``EngineConfig.policy``.
     policy: Optional[Policy] = None
 
 
 class Server:
-    """Greedy/temperature batched decoder over the model zoo API."""
+    """DEPRECATED greedy/temperature batched decoder (engine-backed)."""
 
     def __init__(self, cfg: ArchConfig, sc: ServeConfig, seed: int = 0):
+        warnings.warn(_SERVER_DEPRECATION, DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.sc = sc
         self.model = build_model(cfg)
         self.params, _ = self.model.init(jax.random.key(seed))
-        self._prefill = jax.jit(make_prefill_step(self.model))
-        self._decode = jax.jit(make_decode_step(self.model),
-                               donate_argnums=(1,))
-        # [B] compensated squared logit norms per emitted step (engine's
-        # batched grid: one kernel launch per step for the whole batch)
+        # [T][B] compensated squared logit norms per emitted step, the
+        # old layout (now re-assembled from per-request telemetry traces)
         self.last_stats: list = []
 
     def generate(self, batch: Dict[str, jax.Array], n_new: int,
                  key: Optional[jax.Array] = None) -> jnp.ndarray:
-        """batch: model inputs incl. "tokens" [B, S]. Returns [B, n_new]."""
-        from repro.models.layers import activation_sq_norm
+        """batch: model inputs incl. "tokens" [B, S]. Returns [B, n_new].
 
+        Adapter semantics: row ``i`` becomes a ``Request`` with
+        per-request sampling stream ``i``; the engine serves all rows
+        concurrently (``max_slots = B``), so the lock-step contract is
+        preserved while the numerics ride the request-level engine.
+        The old rule "``key=None`` decodes greedily even at
+        temperature > 0" is kept; when a key IS passed, per-request
+        streams derive from the engine's ``sample_seed`` + row index
+        (the legacy key contents are not replayed).
+        """
+        temperature = self.sc.temperature if key is not None else 0.0
         b, s = batch["tokens"].shape
-        cache, _ = self.model.init_cache(b, s + n_new)
-        logits, cache = self._prefill(self.params, batch, cache)
-        outs = []
+        engine = InferenceEngine(
+            self.cfg,
+            EngineConfig(max_slots=b, max_len=s + n_new,
+                         track_stats=self.sc.track_stats,
+                         policy=self.sc.policy),
+            model=self.model, params=self.params)
+        extras_keys = [k for k in batch if k != "tokens"]
+        requests = [
+            Request(prompt=np.asarray(batch["tokens"][i]),
+                    extras={k: np.asarray(batch[k][i]) for k in extras_keys},
+                    sampling=SamplingParams(
+                        temperature=temperature,
+                        max_new_tokens=n_new, seed=i),
+                    request_id=i)
+            for i in range(b)
+        ]
+        handles = engine.run(requests)
         self.last_stats = []
-        tok = self._sample(logits, key, 0)
-        for i in range(n_new):
-            outs.append(tok)
-            if self.sc.track_stats:
-                # valid-vocab slice only: the padded region carries a
-                # -1e30 mask bias whose square overflows fp32
-                self.last_stats.append(activation_sq_norm(
-                    logits[:, :self.cfg.vocab_size],
-                    scheme=self.sc.policy))
-            logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.asarray(s + i))
-            tok = self._sample(logits, key, i + 1)
-        return jnp.stack(outs, axis=1)
-
-    def _sample(self, logits: jax.Array, key, i: int) -> jax.Array:
-        if self.sc.temperature <= 0.0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        sub = jax.random.fold_in(key, i)
-        return jax.random.categorical(
-            sub, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+        if self.sc.track_stats:
+            self.last_stats = [
+                jnp.asarray(np.array([handles[i].telemetry[t]
+                                      for i in range(b)], np.float32))
+                for t in range(n_new)
+            ]
+        return jnp.asarray(
+            np.array([handles[i].tokens for i in range(b)], np.int32))

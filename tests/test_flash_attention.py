@@ -120,3 +120,33 @@ def test_kahan_accumulators_beat_naive_on_many_blocks():
         errs[scheme] = float(np.max(np.abs(np.asarray(out, np.float64) - want)
                                   / (np.abs(want) + 1e-3)))
     assert errs["kahan"] <= errs["naive"] * 1.01, errs
+
+
+@pytest.mark.parametrize("scheme", ["naive", "kahan"])
+def test_gqa_index_map_matches_broadcast_bitwise(scheme):
+    """q_groups=G routes each k/v head through the BlockSpec index map
+    (bh // G). Same blocks, same rounding — so the output must equal the
+    broadcast-materialized form (and the oracle) to the BIT."""
+    rng = np.random.default_rng(23)
+    b, kvh, g, sq, skv, dh = 2, 2, 3, 160, 160, 64
+    q = jnp.asarray(rng.standard_normal((b * kvh * g, sq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b * kvh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b * kvh, skv, dh)), jnp.float32)
+    grouped = flash_attention(q, k, v, block_q=128, block_k=128,
+                              scheme=scheme, q_groups=g)
+    # broadcast-materialized reference: repeat each k/v head G times
+    kb = jnp.repeat(k, g, axis=0)
+    vb = jnp.repeat(v, g, axis=0)
+    broadcast = flash_attention(q, kb, vb, block_q=128, block_k=128,
+                                scheme=scheme)
+    assert np.array_equal(np.asarray(grouped), np.asarray(broadcast))
+    want = ref.flash_attention_ref(q, k, v, scheme=scheme, block_q=128,
+                                   block_k=128, q_groups=g)
+    assert np.array_equal(np.asarray(grouped), np.asarray(want))
+
+
+def test_gqa_head_count_mismatch_fails_fast():
+    q = jnp.zeros((6, 8, 16), jnp.float32)
+    k = jnp.zeros((4, 8, 16), jnp.float32)
+    with pytest.raises(ValueError, match="q_groups"):
+        flash_attention(q, k, k, q_groups=3)

@@ -10,7 +10,7 @@ The acceptance bar for the registry redesign:
 * registering a toy scheme makes it usable through ops.dot / ops.asum /
   batched_* / sharded_* and visible to core/ecm.py predictions with no
   edits outside the registration call;
-* the legacy ``mode=`` kwarg returns bitwise-identical results and warns;
+* the legacy ``mode=`` alias is GONE: passing it is a TypeError;
 * unknown scheme names fail fast at the API boundary with the registered
   menu in the message.
 """
@@ -234,29 +234,22 @@ def test_toy_scheme_through_sharded_entry_point():
         schemes.unregister("toy-sum2")
 
 
-# --- legacy mode= alias ------------------------------------------------------
+# --- legacy mode= alias: REMOVED --------------------------------------------
 
-def test_mode_alias_bitwise_identical_and_warns():
-    a, b = _data(8 * 128 * 2 + 9, seed=11)
-    for name in ("kahan", "naive"):
-        with pytest.warns(DeprecationWarning, match="mode="):
-            legacy = ops.dot(a, b, mode=name, unroll=2)
-        assert float(legacy) == float(ops.dot(a, b, scheme=name, unroll=2))
-        with pytest.warns(DeprecationWarning, match="mode="):
-            legacy_s = ops.asum(a, mode=name, unroll=2)
-        assert float(legacy_s) == float(ops.asum(a, scheme=name, unroll=2))
-    with pytest.warns(DeprecationWarning, match="mode="):
-        eng = CompensatedReduction(mode="kahan", unroll=2)
-    assert eng.scheme.name == "kahan"
-    with pytest.warns(DeprecationWarning, match="mode="):
-        legacy_ref = ref.dot_ref(a, b, mode="kahan")
-    assert float(legacy_ref) == float(ref.dot_ref(a, b, scheme="kahan"))
-
-
-def test_mode_and_scheme_together_is_an_error():
-    a, b = _data(1024, seed=12)
-    with pytest.raises(TypeError, match="not both"):
-        ops.dot(a, b, scheme="kahan", mode="naive")
+def test_mode_alias_is_gone():
+    """The deprecated alias was removed after the CI gate kept repro.*
+    internals clean — passing it must now fail loudly, not silently
+    resolve. (The migration note lives in repro.kernels.schemes.)"""
+    a, b = _data(1024, seed=11)
+    for call in (lambda: ops.dot(a, b, mode="kahan"),
+                 lambda: ops.asum(a, mode="kahan"),
+                 lambda: CompensatedReduction(mode="kahan"),
+                 lambda: ref.dot_ref(a, b, mode="kahan"),
+                 lambda: coll.sharded_asum(
+                     jax.make_mesh((1,), ("data",)), a, mode="kahan")):
+        with pytest.raises(TypeError, match="mode"):
+            call()
+    assert not hasattr(schemes, "resolve_legacy_mode")
 
 
 # --- fail-fast at the API boundary ------------------------------------------

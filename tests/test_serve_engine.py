@@ -1,0 +1,251 @@
+"""Continuous-batching engine: the bitwise serving contract.
+
+The acceptance bar for request-level serving (the serving analogue of
+the kernels' batched-vs-loop guarantee): a request's emitted tokens AND
+its compensated logit-norm telemetry are bitwise identical whether it
+runs alone or interleaved with arbitrary other traffic under a
+staggered-arrival trace — for every registered compensation scheme,
+across slot reuse after eviction, per-request sampling seeds, and
+heterogeneous ``max_new_tokens``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.kernels.schemes import Policy
+from repro.models import build_model
+from repro.serve import (
+    EngineConfig,
+    InferenceEngine,
+    Request,
+    SamplingParams,
+)
+
+
+def _tiny_cfg(**kw):
+    return ArchConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64, **kw)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, spec, seed=0, temperature=0.0):
+    """spec: [(prompt_len, max_new), ...] -> deterministic requests."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32),
+                sampling=SamplingParams(temperature=temperature,
+                                        max_new_tokens=n),
+                request_id=i)
+        for i, (p, n) in enumerate(spec)
+    ]
+
+
+def _solo_replay(cfg, ec, model, params, req):
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    return eng.run([req])[req.request_id]
+
+
+def _assert_bitwise(cfg, ec, model, params, requests, arrivals):
+    """Serve the trace interleaved, then replay each request alone in a
+    fresh engine over the SAME weights; tokens and telemetry must match
+    to the bit."""
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    served = eng.run(requests, arrivals)
+    for req in requests:
+        solo = _solo_replay(cfg, ec, model, params, req)
+        rid = req.request_id
+        assert solo.tokens == served[rid].tokens, (
+            f"request {rid}: tokens diverge solo vs interleaved")
+        # telemetry values are exact fp32 bits round-tripped via float()
+        assert solo.telemetry == served[rid].telemetry, (
+            f"request {rid}: telemetry diverges solo vs interleaved")
+    return served
+
+
+# ---------------------------------------------------------------------------
+# The headline contract, swept over EVERY registered scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["naive", "kahan", "pairwise", "dot2"])
+def test_solo_vs_interleaved_bitwise(tiny_model, scheme):
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                      policy=Policy(scheme=scheme, unroll=2))
+    served = _assert_bitwise(
+        cfg, ec, model, params,
+        _requests(cfg, [(5, 3), (8, 2), (3, 4)], seed=len(scheme)),
+        arrivals=[0, 1, 2])
+    for h in served.values():
+        assert len(h.telemetry) == len(h.tokens)
+        assert all(np.isfinite(v) and v > 0 for v in h.telemetry)
+
+
+@pytest.mark.slow  # extra tick/admit compiles for the one-off scheme
+def test_runtime_registered_scheme_serves_bitwise(tiny_model):
+    """Any scheme in the registry rides the contract — including one
+    registered after import (the registry's extension guarantee extends
+    to the serving layer)."""
+    from repro.kernels import schemes
+
+    cfg, model, params = tiny_model
+    toy = schemes.CompensationScheme(
+        name="toy-serve",
+        update=lambda s, c, x, step: (s + x, c),
+        instruction_mix=schemes.InstructionMix(adds=1, muls=1),
+        error_bound=lambda n, cond, eps=schemes.EPS32: n * eps * cond)
+    schemes.register(toy)
+    try:
+        ec = EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                          policy=Policy(scheme="toy-serve", unroll=2))
+        _assert_bitwise(cfg, ec, model, params,
+                        _requests(cfg, [(4, 2), (6, 3)]), arrivals=[0, 1])
+    finally:
+        schemes.unregister("toy-serve")
+
+
+# ---------------------------------------------------------------------------
+# Slot reuse after eviction
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_after_eviction(tiny_model):
+    """More requests than slots: finished requests free their slot,
+    queued requests are prefilled into the reused slot mid-flight, and
+    every request still matches its solo replay bitwise."""
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                      policy=Policy(scheme="kahan", unroll=2))
+    reqs = _requests(cfg, [(5, 2), (7, 3), (4, 2), (6, 3), (3, 2)], seed=3)
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    served = eng.run(reqs)                      # all arrive at step 0
+    # with 5 requests and 2 slots, at least 3 admissions reused a slot
+    assert all(h.done for h in served.values())
+    assert eng.scheduler.occupancy == 0 and eng.scheduler.queued == 0
+    for req in reqs:
+        solo = _solo_replay(cfg, ec, model, params, req)
+        assert solo.tokens == served[req.request_id].tokens
+        assert solo.telemetry == served[req.request_id].telemetry
+
+
+def test_occupancy_never_exceeds_slots_and_arrivals_respected(tiny_model):
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=2, max_len=16)
+    reqs = _requests(cfg, [(4, 3), (4, 3), (4, 3), (4, 3)], seed=5)
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    first_emit = {}
+    for t, events in eng.stream(reqs, arrivals=[0, 0, 1, 3]):
+        assert eng.scheduler.occupancy <= ec.max_slots
+        for e in events:
+            first_emit.setdefault(e.request_id, t)
+    for rid, arrival in zip(range(4), [0, 0, 1, 3]):
+        assert first_emit[rid] >= arrival
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling seeds
+# ---------------------------------------------------------------------------
+
+def test_per_request_seeds(tiny_model):
+    """Same prompt, temperature > 0: distinct seeds give distinct
+    streams, equal seeds give identical streams — and a sampled request
+    is still bitwise-stable solo vs interleaved."""
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=3, max_len=16, track_stats=True,
+                      policy=Policy(scheme="kahan", unroll=2))
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    mk = lambda rid, seed: Request(
+        prompt=prompt, request_id=rid,
+        sampling=SamplingParams(temperature=0.9, max_new_tokens=6,
+                                seed=seed))
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    served = eng.run([mk(0, seed=7), mk(1, seed=8), mk(2, seed=7)])
+    assert served[0].tokens == served[2].tokens      # same stream
+    assert served[0].tokens != served[1].tokens      # different stream
+    solo = _solo_replay(cfg, ec, model, params, mk(0, seed=7))
+    assert solo.tokens == served[0].tokens
+    assert solo.telemetry == served[0].telemetry
+
+
+# ---------------------------------------------------------------------------
+# max_new_tokens heterogeneity
+# ---------------------------------------------------------------------------
+
+def test_max_new_tokens_heterogeneity(tiny_model):
+    """Requests with different output budgets finish at different steps;
+    each emits exactly max_new_tokens (the first from prefill logits —
+    a 1-token request never enters the decode batch)."""
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=4, max_len=16, track_stats=True,
+                      policy=Policy(scheme="kahan", unroll=2))
+    spec = [(4, 1), (4, 2), (4, 4), (4, 6)]
+    reqs = _requests(cfg, spec, seed=9)
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    served = eng.run(reqs)
+    for (plen, n), req in zip(spec, reqs):
+        h = served[req.request_id]
+        assert len(h.tokens) == n and len(h.telemetry) == n
+        solo = _solo_replay(cfg, ec, model, params, req)
+        assert solo.tokens == h.tokens and solo.telemetry == h.telemetry
+    # the 6-token request keeps decoding after everyone else finished:
+    # emit 0 rides its admit step, emits 1..5 take five decode ticks
+    assert eng.t == 5
+
+
+# ---------------------------------------------------------------------------
+# Hybrid family: ring-buffer KV + recurrent SSM state in the slot cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow  # full hybrid compile: ring KV + SSM + global attn
+def test_hybrid_ring_and_ssm_state_bitwise():
+    """The slot cache carries ring-buffer KV and SSM recurrent state;
+    the scan slot loop keeps the contract even where vmap's batch
+    vectorization drifts by an ulp (the measured hybrid failure mode)."""
+    cfg = ArchConfig(name="tiny-hybrid", family="hybrid", n_layers=2,
+                     d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                     vocab_size=128, sliding_window=8,
+                     global_attn_layers=(0,),
+                     ssm=SSMConfig(d_state=4, d_conv=2),
+                     param_dtype="float32", compute_dtype="float32",
+                     loss_chunk=64)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    ec = EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                      policy=Policy(scheme="kahan", unroll=2))
+    _assert_bitwise(cfg, ec, model, params,
+                    _requests(cfg, [(4, 3), (9, 2), (3, 3)], seed=2),
+                    arrivals=[0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# API boundary validation
+# ---------------------------------------------------------------------------
+
+def test_submit_validation(tiny_model):
+    cfg, model, params = tiny_model
+    eng = InferenceEngine(cfg, EngineConfig(max_slots=1, max_len=8),
+                          model=model, params=params)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                           sampling=SamplingParams(max_new_tokens=4)))
+    eng.submit(Request(prompt=np.arange(4, dtype=np.int32), request_id=7,
+                       sampling=SamplingParams(max_new_tokens=2)))
+    with pytest.raises(ValueError, match="already submitted"):
+        eng.submit(Request(prompt=np.arange(4, dtype=np.int32),
+                           request_id=7,
+                           sampling=SamplingParams(max_new_tokens=2)))
+    with pytest.raises(ValueError, match="slot_loop"):
+        EngineConfig(slot_loop="bogus")
+    with pytest.raises(ValueError, match="max_slots"):
+        InferenceEngine(cfg, EngineConfig(max_slots=0), model=model,
+                        params=params)
