@@ -3,11 +3,18 @@
 Submits a staggered trace of mixed-length requests to
 ``repro.serve.InferenceEngine``: a fixed decode batch of ``--max-slots``
 per-slot KV caches, where finished requests free their slot mid-flight
-and queued requests are prefilled into the gap. Each request's tokens
-and compensated logit-norm telemetry are bitwise identical to serving
-it alone (see tests/test_serve_engine.py for the enforced contract).
+and queued requests are prefilled into the gap IN CHUNKS — each prompt
+is split into ``--prefill-chunk``-token chunks (partial tails round up
+to power-of-two buckets), so the mixed prompt lengths here compile a
+handful of prefill programs instead of one per distinct length, and
+``--prefill-budget 1`` bounds how long any admission can stall the
+requests already decoding. Each request's tokens and compensated
+logit-norm telemetry are bitwise identical to serving it alone AND to
+one-shot (unchunked) prefill (see tests/test_serve_engine.py for the
+enforced contract).
 
-    PYTHONPATH=src python examples/serve_batched.py [--arch qwen2.5-3b]
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen2.5-3b] \
+        [--prefill-chunk 8] [--prefill-budget 1]
 """
 
 import argparse
@@ -25,12 +32,20 @@ def main():
     ap.add_argument("--max-slots", type=int, default=2)
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt-chunk width (0 -> legacy one-shot admit: "
+                         "one compiled prefill program per distinct "
+                         "prompt length)")
+    ap.add_argument("--prefill-budget", type=int, default=1,
+                    help="max prefill chunks per engine step (0 -> "
+                         "unbounded)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)  # reduced config: runnable on CPU
     rng = np.random.default_rng(0)
     # mixed prompt/output lengths, staggered arrivals — the traffic shape
-    # the lock-step batch API could not express
+    # the lock-step batch API could not express (and, one-shot, the shape
+    # that recompiled prefill on nearly every admission)
     requests, arrivals = [], []
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
@@ -39,22 +54,30 @@ def main():
             prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
             sampling=SamplingParams(max_new_tokens=new)))
         arrivals.append(i // 2)  # two arrivals per engine step
+    n_lengths = len({len(np.asarray(r.prompt)) for r in requests})
 
     engine = InferenceEngine(
         cfg, EngineConfig(max_slots=args.max_slots, max_len=64,
-                          track_stats=True))
+                          track_stats=True,
+                          prefill_chunk=args.prefill_chunk or None,
+                          prefill_budget=args.prefill_budget or None))
     t0 = time.perf_counter()
     n_tok = 0
     for t, events in engine.stream(requests, arrivals):
         n_tok += len(events)
         line = ", ".join(f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
                          for e in events)
-        print(f"step {t:2d} occ={engine.scheduler.occupancy}  {line}")
+        print(f"step {t:2d} occ={engine.scheduler.occupancy} "
+              f"prefilling={len(engine.scheduler.prefilling)}  {line}")
     dt = time.perf_counter() - t0
 
     for rid, h in sorted(engine.handles.items()):
         print(f"request {rid}: {h.tokens}  "
               f"|logits|^2 last={h.telemetry[-1]:.4e}")
+    progs = list(engine.prefill_programs)
+    print(f"{n_lengths} distinct prompt lengths -> {len(progs)} compiled "
+          f"prefill programs {progs} "
+          f"(one-shot would need {n_lengths})")
     print(f"wall: {dt:.2f}s  ({n_tok / dt:.1f} tok/s incl. compile, "
           f"{len(requests)} requests over {engine.t} steps)")
 

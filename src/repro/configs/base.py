@@ -120,7 +120,10 @@ class ArchConfig:
     # not the fast path). The ambient repro.kernels Policy picks the
     # scheme / blocks / accumulate dtype.
     kahan_matmul: bool = False    # dense projections via ops.matmul
-    kahan_attention: bool = False  # prefill attention via engine flash
+    # parallel (multi-token) prefill attention via the engine flash
+    # kernel — model.prefill callers only; the serving engine's chunked
+    # prefill is per-position and does not take this path (ROADMAP)
+    kahan_attention: bool = False
     # dtypes
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"

@@ -3,6 +3,7 @@ engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --trace 0:32:16,1:8:4,3:24:8 [--max-slots 4] [--stats] \
+        [--prefill-chunk 64] [--prefill-budget 1] \
         [--scheme kahan] [--unroll 8] [--compute-dtype float32]
 
 ``--trace`` replays a staggered-arrival request trace through
@@ -10,9 +11,21 @@ engine.
 ``arrival:prompt_len:new_tokens[:temperature]`` cells, one per request
 (arrival measured in engine steps). Mixed prompt lengths and output
 lengths are the point — finished requests free their decode slot
-mid-flight and queued requests are prefilled into the gap. Without
-``--trace``, a uniform batch is synthesized from ``--batch`` /
-``--prompt-len`` / ``--new-tokens``.
+mid-flight and queued requests are prefilled into the gap. Trace cells
+are validated at the parse boundary (negative arrivals, zero lengths and
+negative temperatures fail fast with the offending cell, not as an
+opaque shape error inside a jit trace).
+
+``--prefill-chunk`` splits every prompt into fixed-size chunks (partial
+tails round up to power-of-two buckets), so a mixed-length trace
+compiles O(#buckets) prefill programs instead of one per distinct prompt
+length; ``0`` selects the legacy one-shot admit (bitwise-identical
+output, one compiled program per length). ``--prefill-budget`` caps the
+prefill chunks run per engine step (0 = unbounded): with a budget set, a
+long prompt prefills across steps while the occupied slots keep
+decoding every step — no head-of-line blocking. Without ``--trace``, a
+uniform batch is synthesized from ``--batch`` / ``--prompt-len`` /
+``--new-tokens``.
 
 ``--stats`` turns on the compensated telemetry path: per-request squared
 logit norms computed with the engine's batched (batch, steps) Pallas grid
@@ -38,7 +51,11 @@ from repro.serve import EngineConfig, InferenceEngine, Request, SamplingParams
 
 def parse_trace(spec: str, default_temp: float,
                 ) -> List[Tuple[int, int, int, float]]:
-    """'arrival:prompt_len:new_tokens[:temperature],...' -> tuples."""
+    """'arrival:prompt_len:new_tokens[:temperature],...' -> tuples.
+
+    Validates every cell at the parse boundary (the engine's fail-fast
+    convention): a bad cell names itself here instead of surfacing as an
+    opaque shape error deep inside the prefill trace."""
     cells = []
     for cell in spec.split(","):
         parts = cell.strip().split(":")
@@ -48,6 +65,22 @@ def parse_trace(spec: str, default_temp: float,
                 "[:temperature]")
         arrival, plen, new = (int(p) for p in parts[:3])
         temp = float(parts[3]) if len(parts) == 4 else default_temp
+        if arrival < 0:
+            raise ValueError(
+                f"trace cell {cell!r}: arrival must be >= 0 (engine "
+                f"steps), got {arrival}")
+        if plen < 1:
+            raise ValueError(
+                f"trace cell {cell!r}: prompt_len must be >= 1, got "
+                f"{plen} (an empty prompt has no prefill logits to "
+                "sample the first token from)")
+        if new < 1:
+            raise ValueError(
+                f"trace cell {cell!r}: new_tokens must be >= 1, got {new}")
+        if temp < 0:
+            raise ValueError(
+                f"trace cell {cell!r}: temperature must be >= 0 "
+                f"(0 = greedy), got {temp}")
         cells.append((arrival, plen, new, temp))
     return cells
 
@@ -68,6 +101,17 @@ def main():
                     help="decode batch width (concurrent requests)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="per-slot cache capacity; 0 -> fit the trace")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt-chunk width for chunked prefill "
+                         "(compiled prefill programs = chunk + power-of-"
+                         "two tail buckets, independent of how many "
+                         "distinct prompt lengths the trace has); 0 -> "
+                         "legacy one-shot admit (one program per length)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill chunks per engine step across all "
+                         "admitting requests (bounds how long a long "
+                         "prompt can stall running requests' decode); "
+                         "0 -> unbounded (admits finish in their step)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="prompt-content RNG seed")
@@ -118,13 +162,18 @@ def main():
 
     engine = InferenceEngine(
         cfg, EngineConfig(max_slots=args.max_slots, max_len=max_len,
-                          track_stats=args.stats, policy=policy))
+                          track_stats=args.stats, policy=policy,
+                          prefill_chunk=args.prefill_chunk or None,
+                          prefill_budget=args.prefill_budget or None))
     for t, events in engine.stream(requests, arrivals):
         emitted = ", ".join(
             f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
             for e in events)
         print(f"# step {t:3d} occupancy={engine.scheduler.occupancy} "
+              f"prefilling={len(engine.scheduler.prefilling)} "
               f"queued={engine.scheduler.queued}  {emitted}")
+    print(f"# compiled prefill programs (width, runs_setup): "
+          f"{list(engine.prefill_programs)}")
 
     for rid, h in sorted(engine.handles.items()):
         arrival, plen, new, temp = cells[rid]

@@ -8,6 +8,11 @@
   sequence chunks under ``jax.checkpoint`` with KAHAN-COMPENSATED chunk
   accumulation (paper technique, applied to the longest fp32 reduction in
   training: the per-token loss sum over ~1M tokens).
+* ``prefill_chunk_scan`` / ``decode_prefill_chunk`` — the model-zoo half
+  of the serving engine's chunked prefill: advance a batch-1 decode cache
+  by a fixed-width token chunk starting at an arbitrary offset, one
+  position at a time through ONE barrier-pinned traced body (the
+  families' ``prefill_chunk`` methods delegate here).
 """
 
 from __future__ import annotations
@@ -71,6 +76,73 @@ def cache_batch_axes(cache_specs: Params) -> Params:
 
     return jax.tree.map(one, cache_specs,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Chunked (resume-from-offset) prefill
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_scan(step_fn: Callable, tokens: jax.Array, cache: Any,
+                       offset: jax.Array, nvalid: jax.Array, v_pad: int,
+                       ) -> Tuple[jax.Array, Any]:
+    """Advance a batch-1 decode cache by one fixed-width prompt chunk.
+
+    ``tokens``: [1, w] int32 — the chunk, zero-padded past ``nvalid``
+    (bucket padding: the serving engine rounds a partial tail chunk up
+    to a small power-of-two bucket so the compiled program set stays
+    O(#buckets), not O(#distinct prompt lengths)). ``offset`` / ``nvalid``
+    are TRACED scalars: position ``offset + i`` is fed to the body per
+    step, so resuming at any offset reuses one compiled program.
+    ``step_fn(cache, token, pos) -> (logits [1, v_pad], cache)`` is the
+    model's single-position decode body. Returns ``(logits of the last
+    VALID position [1, v_pad], advanced cache)``.
+
+    THE BITWISE DISCIPLINE (the serving analogue of the kernel/oracle
+    shared-block-body technique): every prompt position is computed by
+    this ONE traced body via ``lax.scan``, whatever chunk width the
+    program around it has — one-shot admit (w = prompt_len), full chunks
+    (w = prefill_chunk) and padded tail buckets all execute the identical
+    per-position rounding sequence. ``lax.optimization_barrier`` pins the
+    body boundary so XLA cannot fuse or vectorize it differently per
+    chunk width (measured on XLA CPU: unpinned cross-width programs
+    drift by an ulp, the same failure mode as vmap's batch
+    vectorization). Steps past ``nvalid`` run on the pad token and are
+    DISCARDED by an exact elementwise select, so bucket padding never
+    touches the cache or the returned logits.
+    """
+    w = tokens.shape[-1]
+
+    def body(carry, inp):
+        cache, last = carry
+        tok, i = inp
+        cache = jax.lax.optimization_barrier(cache)
+        logits, new_cache = step_fn(cache, tok, offset + i)
+        logits, new_cache = jax.lax.optimization_barrier((logits, new_cache))
+        valid = i < nvalid
+        cache = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
+                             new_cache, cache)
+        last = jnp.where(valid, logits[0], last)
+        return (cache, last), None
+
+    last0 = jnp.zeros((v_pad,), jnp.float32)
+    (cache, last), _ = jax.lax.scan(
+        body, (cache, last0), (tokens[0], jnp.arange(w)))
+    return last[None], cache
+
+
+def decode_prefill_chunk(model, params: Params, batch: Dict[str, jax.Array],
+                         cache: Any, offset: jax.Array, nvalid: jax.Array,
+                         ) -> Tuple[jax.Array, Any]:
+    """Default family ``prefill_chunk``: the per-position body IS the
+    model's own ``decode_step``, so chunked prefill shares its update
+    semantics (cache writes at traced positions, ring wrap, recurrent
+    state) with decode by construction."""
+
+    def step(cache, tok, pos):
+        return model.decode_step(params, cache, tok[None], pos)
+
+    return prefill_chunk_scan(step, batch["tokens"], cache, offset, nvalid,
+                              model.cfg.padded_vocab)
 
 
 # ---------------------------------------------------------------------------

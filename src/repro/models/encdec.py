@@ -21,6 +21,7 @@ from repro.models.common import (
     Params,
     chunked_ce_loss,
     decode_logits,
+    decode_prefill_chunk,
     init_embed_and_head,
     lm_head_weight,
     stack_init,
@@ -192,23 +193,15 @@ class EncDecLM:
     def prefill(self, params, batch, caches):
         cfg = self.cfg
         cd = _dtype(cfg.compute_dtype)
-        enc_out = self.encode(params, batch["frames"])
-
-        # fill the per-layer cross K/V caches
-        def fill(_, p_l):
-            xk = dense(p_l["xattn"]["k"], enc_out, cd)
-            xv = dense(p_l["xattn"]["v"], enc_out, cd)
-            return None, (xk, xv)
-
-        _, (xks, xvs) = jax.lax.scan(fill, None, params["decoder"])
-        caches = dict(caches)
-        caches["xk"], caches["xv"] = xks, xvs
+        # ONE encode + cross-K/V fill, shared verbatim with the chunked
+        # path; the decoder then reads the cached memory (enc_out=None),
+        # exactly as decode_step does
+        caches = self.prefill_begin(params, batch, caches)
 
         x = embed_lookup(params["embed"], batch["tokens"], cd)
         q_pos = jnp.arange(x.shape[1])
-        scan_caches = caches  # per-layer dict for the scan
-        x, new_caches = self._dec_run(params, x, enc_out, q_pos=q_pos,
-                                      caches=scan_caches)
+        x, new_caches = self._dec_run(params, x, None, q_pos=q_pos,
+                                      caches=caches)
         x = norm_apply(params["final_norm"], x, cfg.norm)
         return decode_logits(x[:, -1:, :], params, cfg), new_caches
 
@@ -220,3 +213,28 @@ class EncDecLM:
                                       caches=caches, cache_index=pos)
         x = norm_apply(params["final_norm"], x, cfg.norm)
         return decode_logits(x, params, cfg), new_caches
+
+    def prefill_begin(self, params, batch, caches):
+        """One-time prefill setup (the serving engine runs it inside the
+        FIRST chunk program only): encode the frames and fill the
+        per-layer cross-attention K/V caches, so later chunks and decode
+        steps read the cached memory instead of re-encoding."""
+        cd = _dtype(self.cfg.compute_dtype)
+        enc_out = self.encode(params, batch["frames"])
+
+        def fill(_, p_l):
+            xk = dense(p_l["xattn"]["k"], enc_out, cd)
+            xv = dense(p_l["xattn"]["v"], enc_out, cd)
+            return None, (xk, xv)
+
+        _, (xks, xvs) = jax.lax.scan(fill, None, params["decoder"])
+        caches = dict(caches)
+        caches["xk"], caches["xv"] = xks, xvs
+        return caches
+
+    def prefill_chunk(self, params, batch, cache, offset, nvalid):
+        """Resume-from-offset prefill over the decoder; cross-attention
+        reads the ``prefill_begin``-cached K/V (the per-position body is
+        ``decode_step``)."""
+        return decode_prefill_chunk(self, params, batch, cache, offset,
+                                    nvalid)

@@ -24,6 +24,7 @@ from repro.models.common import (
     Params,
     chunked_ce_loss,
     decode_logits,
+    decode_prefill_chunk,
     init_embed_and_head,
     lm_head_weight,
     stack_init,
@@ -219,3 +220,10 @@ class HymbaLM:
                                   cache_index=pos)
         x = norm_apply(params["final_norm"], x, cfg.norm)
         return decode_logits(x, params, cfg), new_caches
+
+    def prefill_chunk(self, params, batch, cache, offset, nvalid):
+        """Resume-from-offset prefill over the hybrid cache: ring-buffer
+        KV writes wrap and the SSM recurrent state advances exactly as in
+        decode (the per-position body IS ``decode_step``)."""
+        return decode_prefill_chunk(self, params, batch, cache, offset,
+                                    nvalid)

@@ -31,6 +31,7 @@ from repro.models.common import (
     decode_logits,
     init_embed_and_head,
     lm_head_weight,
+    prefill_chunk_scan,
     stack_init,
 )
 from repro.models.layers import (
@@ -298,15 +299,50 @@ class TransformerLM:
         logits = decode_logits(x[:, -1:, :], params, cfg)
         return logits, new_caches
 
-    def decode_step(self, params: Params, caches: Dict[str, Any],
-                    tokens: jax.Array, pos: jax.Array,
-                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+    def _decode_x(self, params: Params, caches: Dict[str, Any],
+                  x: jax.Array, pos: jax.Array,
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Single-position decode from an already-embedded [B,1,D] input
+        (shared by ``decode_step`` and the chunked-prefill body, which
+        embeds per position so it can splice vision embeddings)."""
         cfg = self.cfg
-        cd = _dtype(cfg.compute_dtype)
-        x = embed_lookup(params["embed"], tokens[:, None], cd)
         q_pos = pos[None]
         x, new_caches, _, _ = self._run_segments(
             params, x, q_pos=q_pos, caches=caches, cache_index=pos)
         x = norm_apply(params["final_norm"], x, cfg.norm)
         logits = decode_logits(x, params, cfg)
         return logits, new_caches
+
+    def decode_step(self, params: Params, caches: Dict[str, Any],
+                    tokens: jax.Array, pos: jax.Array,
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        x = embed_lookup(params["embed"], tokens[:, None], cd)
+        return self._decode_x(params, caches, x, pos)
+
+    def prefill_chunk(self, params: Params, batch: Dict[str, jax.Array],
+                      cache: Dict[str, Any], offset: jax.Array,
+                      nvalid: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Resume-from-offset prefill (the serving engine's chunking
+        hook): advance a batch-1 cache by ``batch["tokens"]`` at
+        positions ``offset + i``. VLM prompts splice
+        ``batch["vision_embeds"]`` at positions < n_patches, mirroring
+        ``_embed``'s whole-prompt splice per position."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        vis = None
+        if cfg.vision is not None and "vision_embeds" in batch:
+            vis = batch["vision_embeds"].astype(cd)       # [1, n_patches, D]
+
+        def step(cache, tok, pos):
+            x = embed_lookup(params["embed"], tok[None, None], cd)  # [1,1,D]
+            if vis is not None:
+                npch = cfg.vision.n_patches
+                v = jax.lax.dynamic_slice_in_dim(
+                    vis, jnp.clip(pos, 0, npch - 1), 1, axis=1)
+                x = jnp.where(pos < npch, v, x)
+            return self._decode_x(params, cache, x, pos)
+
+        return prefill_chunk_scan(step, batch["tokens"], cache, offset,
+                                  nvalid, cfg.padded_vocab)

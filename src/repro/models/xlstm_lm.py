@@ -18,6 +18,7 @@ from repro.models.common import (
     Params,
     chunked_ce_loss,
     decode_logits,
+    decode_prefill_chunk,
     init_embed_and_head,
     lm_head_weight,
     stack_init,
@@ -159,3 +160,9 @@ class XLSTMLM:
         x, new_caches = self._run(params, x, caches=caches)
         x = norm_apply(params["final_norm"], x, cfg.norm)
         return decode_logits(x, params, cfg), new_caches
+
+    def prefill_chunk(self, params, batch, cache, offset, nvalid):
+        """Resume-from-offset prefill: the O(1) recurrent state makes the
+        offset implicit — the per-position body is ``decode_step``."""
+        return decode_prefill_chunk(self, params, batch, cache, offset,
+                                    nvalid)

@@ -1,16 +1,20 @@
 """Request-level serving: continuous batching over the model zoo.
 
   engine.py     — ``InferenceEngine``: submit(Request) -> RequestHandle,
-                  step() (fused prefill-admit + decode tick), run/stream;
-                  per-request sampling keys via fold_in; ONE Policy for
-                  every compensated reduction; bitwise solo-vs-batched
+                  step() (admissions + budgeted CHUNKED PREFILL + decode
+                  tick), run/stream; per-request sampling keys via
+                  fold_in; ONE Policy for every compensated reduction;
+                  bitwise solo-vs-batched AND chunked-vs-one-shot
                   determinism (see the engine docstring for the contract
                   and the mechanisms that carry it).
-  scheduler.py  — Request / SamplingParams / RequestHandle and the
+  scheduler.py  — Request / SamplingParams / RequestHandle, the QUEUED →
+                  PREFILLING → RUNNING → FINISHED lifecycle, and the
                   deterministic FIFO + lowest-free-slot scheduler.
   slots.py      — ``SlotKVCache``: the fixed-width slot cache, with
                   per-leaf request axes derived from the models' cache
-                  specs (``repro.models.cache_batch_axes``).
+                  specs (``repro.models.cache_batch_axes``); pure
+                  gather_row/scatter_row helpers the prefill-chunk
+                  programs compose in-trace.
 """
 
 from repro.serve.engine import (  # noqa: F401

@@ -7,38 +7,67 @@ request-level API::
     handle = engine.submit(Request(prompt=[3, 1, 4], sampling=SamplingParams(
         temperature=0.7, max_new_tokens=32)))
     while not handle.done:
-        engine.step()                 # one fused prefill-admit + decode tick
+        engine.step()                 # one engine tick
     print(handle.tokens, handle.telemetry)
 
 Scheduling model: a fixed decode batch of ``max_slots`` per-slot caches
 (``repro.serve.slots``). Each ``step()`` first admits queued requests
-into free slots — one single-request prefill each, scattered into the
-slot — then runs ONE decode tick over the whole slot batch; finished
-requests free their slot mid-flight for the next step's admissions.
+into free slots (they enter the PREFILLING lifecycle state and own the
+slot's pristine cache row), then runs CHUNKED PREFILL — at most
+``EngineConfig.prefill_budget`` fixed-size prompt chunks across the
+prefilling requests, oldest first — and finally ONE decode tick over the
+slots whose requests are RUNNING. Finished requests free their slot
+mid-flight for the next step's admissions.
+
+CHUNKED PREFILL (why): the one-shot admit of PR 4 compiled one XLA
+program per DISTINCT PROMPT LENGTH (a mixed-length trace recompiled on
+nearly every admission) and ran a whole prompt's prefill inside one
+step() (a single long prompt stalled every occupied decode slot for its
+full prefill — head-of-line blocking). Now a prompt is split into
+fixed-size chunks of ``EngineConfig.prefill_chunk`` tokens; the last
+partial chunk is zero-padded up to a small power-of-two BUCKET (padded
+steps are computed and exactly discarded), so the compiled prefill
+program set is O(#buckets) ≈ log2(prefill_chunk), not O(#distinct
+prompt lengths); and with a chunk budget set, the time-to-next-decode-
+token of already-running requests is bounded by ``prefill_budget``
+chunks instead of a whole prompt. ``prefill_chunk=None`` keeps the
+legacy one-shot admit (whole prompt in one per-length program) as the
+baseline the tests and benchmarks compare against.
 
 THE NUMERICS CONTRACT (the serving-layer analogue of the engine's
 batched-vs-loop guarantee): a request's emitted tokens and its
-compensated logit-norm telemetry are BITWISE IDENTICAL whether it runs
-alone or interleaved with arbitrary other traffic, for every registered
-compensation scheme. Three mechanisms carry it:
+compensated logit-norm telemetry are BITWISE IDENTICAL (a) whether it
+runs alone or interleaved with arbitrary other traffic, AND (b) whether
+its prompt is prefilled one-shot or in chunks of any size — for every
+registered compensation scheme. Four mechanisms carry it:
 
+* ALL prefill — one-shot and every chunk width — scans ONE shared
+  per-position traced body (``models.common.prefill_chunk_scan`` over
+  the family's ``decode_step``) with ``lax.optimization_barrier``
+  pinning the body boundary and TRACED offset/position/validity
+  operands. Programs differ only in scan trip count and discarded pad
+  steps, so every prompt position executes the identical rounding
+  sequence whatever program computes it — the same shared-traced-body
+  discipline as the kernels' block-body/oracle equality. The chunk
+  schedule is a pure function of (prompt_len, prefill_chunk): scheduler
+  choices (budget, interleaving, slot placement) cannot leak into a
+  request's bits;
 * the decode tick maps ONE single-request decode body over the slot
   axis (per-slot cache row, token, position, sampling key) — by default
   as a ``lax.scan`` whose body compiles ONCE, so every slot executes
   the identical instruction (and rounding) sequence regardless of which
-  slot a request landed in. This is the serving-layer form of the
-  kernels' shared-block-body technique: ``jax.vmap`` keeps per-slot
-  math row-independent in exact arithmetic, but XLA's fusion autotuning
-  may vectorize different batch rows through different code paths
-  (measured: ~1-ulp logit drift between slot 0 and slot 1 on the hybrid
-  SSM decode), which would leak a request's slot placement into its
-  bits. ``EngineConfig.slot_loop="vmap"`` opts into the fully parallel
-  tick for throughput work that doesn't need the bitwise guarantee.
-  Either way the body is traced at batch 1, so even batch-coupled
-  layers like MoE capacity routing are row-local, and the tick width is
-  always ``max_slots`` — a solo request runs the very same compiled
-  program as a full house;
-* prefill always runs at batch 1 (one admit per request), so its
+  slot a request landed in (``jax.vmap`` keeps per-slot math
+  row-independent in exact arithmetic, but XLA's fusion autotuning may
+  vectorize different batch rows through different code paths —
+  measured: ~1-ulp logit drift on the hybrid SSM decode.
+  ``EngineConfig.slot_loop="vmap"`` opts into the fully parallel tick
+  for throughput work that doesn't need the bitwise guarantee). The
+  tick updates ONLY the rows of RUNNING slots — free and PREFILLING
+  rows keep their bits through an exact post-scan select, which is what
+  lets a partially prefilled row live in the slot cache while its
+  neighbours decode;
+* prefill chunk programs operate on the request's own batch-1 row
+  (gathered from / scattered back to its slot in-trace), so the
   program depends only on the request's own prompt;
 * sampling keys fold from per-request state only
   (``fold_in(fold_in(engine_key, request.seed), emit_index)``), and the
@@ -49,15 +78,22 @@ compensation scheme. Three mechanisms carry it:
 ONE ``repro.kernels.Policy`` (``EngineConfig.policy``) selects the
 compensation scheme / unroll / accumulate dtype for everything the
 engine computes — the telemetry norms here, and the model's own
-projections / prefill attention when ``ArchConfig.kahan_matmul`` /
-``kahan_attention`` route them through the kernels.
+projections when ``ArchConfig.kahan_matmul`` routes them through the
+kernels. NOTE: ``ArchConfig.kahan_attention`` routes the PARALLEL
+multi-token prefill (``model.prefill`` — training-adjacent callers,
+dry-run shape cells) through the engine's flash kernel; the serving
+engine's prefill is per-position by construction (that is what carries
+the chunked bitwise contract), so it never takes that path — a parallel
+chunk body behind the same contract is the ROADMAP next step that would
+restore flash-prefill coverage here.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,27 +109,43 @@ from repro.serve.scheduler import (
     SamplingParams,
     SlotScheduler,
 )
-from repro.serve.slots import SlotKVCache, _donate
+from repro.serve.slots import SlotKVCache, _donate, gather_row, scatter_row
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Engine-level (not per-request) serving configuration.
 
-    max_slots    decode batch width: concurrent requests served per tick
-    max_len      per-slot cache capacity (prompt + generated tokens)
-    track_stats  record the compensated squared logit norm per emitted
-                 token (the per-request telemetry trace)
-    policy       ONE Policy for every compensated reduction the engine
-                 runs; None captures the ambient ``use_policy`` default
-                 at engine construction
-    sample_seed  seed of the engine-level sampling key; per-request
-                 streams fold their ``SamplingParams.seed`` into it
-    slot_loop    how the decode tick maps the single-request body over
-                 slots: "scan" (default — one traced body, identical
-                 rounding per slot, carries the bitwise contract) or
-                 "vmap" (fully parallel rows; bitwise slot-placement
-                 invariance is then up to the backend's vectorizer)
+    max_slots      decode batch width: concurrent requests served per tick
+    max_len        per-slot cache capacity (prompt + generated tokens)
+    track_stats    record the compensated squared logit norm per emitted
+                   token (the per-request telemetry trace)
+    policy         ONE Policy for every compensated reduction the engine
+                   runs; None captures the ambient ``use_policy`` default
+                   at engine construction
+    sample_seed    seed of the engine-level sampling key; per-request
+                   streams fold their ``SamplingParams.seed`` into it
+    slot_loop      how the decode tick maps the single-request body over
+                   slots: "scan" (default — one traced body, identical
+                   rounding per slot, carries the bitwise contract) or
+                   "vmap" (fully parallel rows; bitwise slot-placement
+                   invariance is then up to the backend's vectorizer)
+    prefill_chunk  prompt-chunk width for chunked prefill (the compiled
+                   prefill program set is {prefill_chunk} plus power-of-
+                   two tail buckets below it). None = legacy one-shot
+                   admit: the whole prompt in ONE program per distinct
+                   prompt length — bitwise-identical to the chunked path
+                   but O(#lengths) compiles and unbounded admit stalls
+    prefill_budget max prefill chunks run per ``step()`` across all
+                   PREFILLING requests (oldest first); None = unbounded
+                   (every admitted request finishes its prefill within
+                   the admitting step — one-shot-era step timing). Set
+                   to 1 to bound already-running requests' time-to-next-
+                   token by a single chunk of prefill work
+    max_finished   retain at most this many FINISHED handles in
+                   ``engine.handles`` (oldest-finished evicted first);
+                   None = retain all (callers can still drain with
+                   ``pop_finished()``)
     """
 
     max_slots: int = 4
@@ -102,11 +154,28 @@ class EngineConfig:
     policy: Optional[Policy] = None
     sample_seed: int = 0
     slot_loop: str = "scan"
+    prefill_chunk: Optional[int] = 64
+    prefill_budget: Optional[int] = None
+    max_finished: Optional[int] = None
 
     def __post_init__(self):
         if self.slot_loop not in ("scan", "vmap"):
             raise ValueError(
                 f"slot_loop must be 'scan' or 'vmap', got {self.slot_loop!r}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1 (or None for one-shot "
+                f"prefill), got {self.prefill_chunk}")
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1 (or None for unbounded), "
+                f"got {self.prefill_budget}")
+        if self.max_finished is not None and self.max_finished < 0:
+            raise ValueError(
+                f"max_finished must be >= 0 (or None to retain all), "
+                f"got {self.max_finished}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,13 +188,57 @@ class TokenEvent:
     done: bool
 
 
+def _bucket(n: int, chunk: int) -> int:
+    """Smallest power-of-two >= n, capped at the chunk width — the
+    static widths a partial tail chunk may compile to."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, chunk)
+
+
+def _next_chunk(prompt_len: int, offset: int, chunk: Optional[int],
+                ) -> Tuple[int, int]:
+    """(width, nvalid) of the next prefill chunk at ``offset``.
+
+    A pure function of the request's own prompt length and the engine's
+    static chunk width — scheduler state cannot influence it, which is
+    half of the chunked bitwise contract."""
+    remaining = prompt_len - offset
+    if chunk is None:                       # one-shot: whole prompt
+        return prompt_len, prompt_len
+    if remaining > chunk:
+        return chunk, chunk
+    return _bucket(remaining, chunk), remaining
+
+
+class _ServePrograms:
+    """The engine's compiled callables: one decode ``tick`` plus
+    lazily-built prefill chunk programs keyed by (width, runs_begin) —
+    the ONLY shape parameters a chunk program has, which is what makes
+    the compiled prefill program set O(#buckets)."""
+
+    def __init__(self, tick, prefill_factory):
+        self.tick = tick
+        self._factory = prefill_factory
+        self._prefill: Dict[Tuple[int, bool], Any] = {}
+
+    def prefill(self, width: int, first: bool):
+        key = (width, first)
+        if key not in self._prefill:
+            self._prefill[key] = self._factory(width, first)
+        return self._prefill[key]
+
+
 def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
-                  batch_axes):
-    """Build (or fetch) the jitted admit / decode-tick callables.
+                  batch_axes) -> _ServePrograms:
+    """Build (or fetch) the engine's jitted callables.
 
     Cached ON the model object keyed by the engine signature, so several
-    engines over the same model instance (e.g. a solo-replay engine next
-    to the serving engine in the determinism tests) share compiled code.
+    engines over the same model instance (e.g. a solo-replay or one-shot
+    reference engine next to the serving engine in the determinism
+    tests) share compiled code — widths shared between a chunked and a
+    one-shot engine resolve to the SAME program.
     """
     key = ("serve", ec.max_slots, ec.max_len, ec.track_stats,
            ec.sample_seed, ec.slot_loop, policy)
@@ -156,7 +269,7 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
         return activation_sq_norm(logits[:, :vocab], scheme=policy)
 
     def decode_one(params, cache_row, token, pos, seed, eidx, temp):
-        """ONE request's decode step — the unit vmap maps over slots.
+        """ONE request's decode step — the unit mapped over slots.
         Re-inserts the request axis (size 1) per cache leaf, runs the
         model's own decode_step, samples with the request's folded key.
         """
@@ -196,31 +309,60 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
 
     @functools.partial(jax.jit, donate_argnums=tuple(
         1 + i for i in _donate()))
-    def tick(params, cache, tokens, pos, seeds, eidx, temps):
+    def tick(params, cache, tokens, pos, seeds, eidx, temps, live):
         with use_policy(policy):
             logits, new_cache, next_tok = decode_slots(
                 params, cache, tokens, pos, seeds, eidx, temps)
+            # ONLY running slots advance: free and PREFILLING rows keep
+            # their bits (a partially prefilled row must not be stomped
+            # by the garbage compute of its own tick lane). The select is
+            # exact and applied OUTSIDE the scanned body, so live rows'
+            # bits are untouched.
+            def keep(new, old, a):
+                shape = [1] * new.ndim
+                shape[a] = live.shape[0]
+                return jnp.where(live.reshape(shape), new, old)
+
+            new_cache = jax.tree.map(keep, new_cache, cache, batch_axes)
             norms = (_norms(logits) if ec.track_stats
                      else jnp.zeros((ec.max_slots,), jnp.float32))
         return new_cache, next_tok, norms
 
-    @jax.jit
-    def admit(params, batch, seed, temp):
-        """Fused prefill-admit: build a pristine single-request cache
-        in-trace, prefill the prompt, sample emit 0 from the prefill
-        logits. Always batch 1 — the program depends only on the
-        request's own prompt length."""
-        with use_policy(policy):
-            row, _ = model.init_cache(1, ec.max_len)
-            logits, row = model.prefill(params, batch, row)     # [1, V_pad]
-            k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
-                                   jnp.int32(0))
-            tok = sample_row(logits[0], k, temp)
-            norm = (_norms(logits)[0] if ec.track_stats
-                    else jnp.float32(0.0))
-        return row, tok, norm
+    begin = getattr(model, "prefill_begin", None)
 
-    fns = (admit, tick)
+    def prefill_factory(width: int, first: bool):
+        """One jitted prefill-chunk program for a static chunk width.
+
+        Gathers the request's batch-1 row from its slot, (optionally)
+        runs the family's one-time ``prefill_begin`` setup, scans the
+        shared per-position body over the chunk, scatters the row back,
+        and samples emit 0 + its telemetry norm from the carried
+        last-valid-position logits (the engine uses them only when this
+        was the request's final chunk)."""
+
+        @functools.partial(jax.jit, donate_argnums=tuple(
+            1 + i for i in _donate()))
+        def prefill(params, cache, slot, batch, offset, nvalid, seed, temp):
+            with use_policy(policy):
+                row = gather_row(cache, batch_axes, slot)
+                if first and begin is not None:
+                    # pinned like the scan body: the setup's bits must
+                    # not depend on which width the first chunk has
+                    row = jax.lax.optimization_barrier(
+                        begin(params, batch, row))
+                logits, row = model.prefill_chunk(params, batch, row,
+                                                  offset, nvalid)
+                new_cache = scatter_row(cache, row, batch_axes, slot)
+                k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
+                                       jnp.int32(0))
+                tok = sample_row(logits[0], k, temp)
+                norm = (_norms(logits)[0] if ec.track_stats
+                        else jnp.float32(0.0))
+            return new_cache, tok, norm
+
+        return prefill
+
+    fns = _ServePrograms(tick, prefill_factory)
     cache[key] = fns
     return fns
 
@@ -247,11 +389,22 @@ class InferenceEngine:
         self.params = params
         self.slots = SlotKVCache(self.model, ec.max_slots, ec.max_len)
         self.scheduler = SlotScheduler(ec.max_slots)
-        self._admit_fn, self._tick_fn = _compiled_fns(
+        self._fns = _compiled_fns(
             self.model, cfg, ec, self.policy, self.slots.batch_axes)
+        self._needs_begin = getattr(self.model, "prefill_begin", None) is not None
+        # (width, runs_begin) of every prefill program THIS engine's
+        # traffic has needed (the jitted programs themselves are shared
+        # model-wide, so a solo-replay engine reuses the loaded engine's)
+        self._used_prefill: set = set()
         self._next_id = 0
         self.t = 0                       # engine step counter
         self.handles: Dict[int, RequestHandle] = {}
+        self._finished: Deque[int] = collections.deque()
+        # per-request extras, converted to device arrays ONCE at the
+        # first chunk (multi-chunk prompts would otherwise re-upload the
+        # full vision/frame embedding tensor every chunk); dropped when
+        # the prefill completes
+        self._extras_dev: Dict[int, Dict[str, jax.Array]] = {}
 
     # ------------------------------------------------------------ submission
     def submit(self, request: Request) -> RequestHandle:
@@ -264,46 +417,72 @@ class InferenceEngine:
         self._next_id = max(self._next_id, rid) + 1
         if request.sampling.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        prompt_len = int(np.asarray(request.prompt).shape[0])
+        prompt = np.asarray(request.prompt)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            # validated here, at the API boundary — an empty or
+            # mis-shaped prompt would otherwise surface as an opaque
+            # shape error deep inside the prefill trace
+            raise ValueError(
+                f"request {rid}: prompt must be a non-empty 1-D token "
+                f"sequence, got shape {tuple(prompt.shape)}")
+        prompt_len = int(prompt.shape[0])
         if prompt_len + request.sampling.max_new_tokens - 1 > self.ec.max_len:
             raise ValueError(
                 f"request {rid}: prompt_len={prompt_len} + "
                 f"max_new_tokens={request.sampling.max_new_tokens} exceeds "
                 f"the engine's max_len={self.ec.max_len}")
-        handle = RequestHandle(request_id=rid, request=request)
+        handle = RequestHandle(request_id=rid, request=request,
+                               prompt_len=prompt_len)
         self.handles[rid] = handle
         self.scheduler.submit(handle)
         return handle
 
-    def _batch_for(self, request: Request) -> Dict[str, jax.Array]:
-        batch = {"tokens": jnp.asarray(np.asarray(request.prompt),
-                                       jnp.int32)[None, :]}
-        for k, v in (request.extras or {}).items():
-            batch[k] = jnp.asarray(v)[None]
+    def _chunk_batch(self, rid: int, request: Request, offset: int,
+                     width: int, nvalid: int) -> Dict[str, jax.Array]:
+        """Model inputs for one prefill chunk: the [1, width] token
+        window (zero-padded past nvalid — those scan steps are exactly
+        discarded) plus the request's extras, whose shapes are
+        config-static (vision patch / frame counts), every chunk —
+        converted to device arrays once and reused across chunks."""
+        prompt = np.asarray(request.prompt)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :nvalid] = prompt[offset:offset + nvalid]
+        batch = {"tokens": jnp.asarray(toks)}
+        if request.extras:
+            if rid not in self._extras_dev:
+                self._extras_dev[rid] = {k: jnp.asarray(v)[None]
+                                         for k, v in request.extras.items()}
+            batch.update(self._extras_dev[rid])
         return batch
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[TokenEvent]:
-        """One engine tick: admit queued requests into free slots (one
-        batch-1 prefill each, emitting the request's first token), then
-        one vmapped decode tick over the whole slot batch. Returns the
-        tokens emitted this step, admission order first."""
+        """One engine tick: admit queued requests into free slots, run up
+        to ``prefill_budget`` prefill chunks (oldest request first; a
+        request whose last chunk lands emits its first token and joins
+        the decode batch), then one decode tick over the running slots.
+        Returns the tokens emitted this step, prefill completions first.
+        """
         events: List[TokenEvent] = []
         sch = self.scheduler
 
-        # -- fused prefill-admit ------------------------------------------
-        while sch.can_admit():
-            h = sch.admit_next()
-            sp = h.request.sampling
-            row, tok, norm = self._admit_fn(
-                self.params, self._batch_for(h.request),
-                jnp.asarray(h.seed, jnp.int32),
-                jnp.asarray(sp.temperature, jnp.float32))
-            self.slots.write(h.slot, row)
-            h.pos = int(np.asarray(h.request.prompt).shape[0])
-            self._record(h, int(tok), norm, events)
+        # -- admissions + budgeted chunked prefill ------------------------
+        budget = self.ec.prefill_budget
+        spent = 0
+        while True:
+            while sch.can_admit():
+                sch.admit_next()
+            if budget is not None and spent >= budget:
+                break
+            prefilling = sch.prefilling
+            if not prefilling:
+                break
+            # oldest admitted request first: FIFO prefill, deterministic
+            slot, h = next(iter(prefilling.items()))
+            self._run_chunk(slot, h, events)
+            spent += 1
 
-        # -- decode tick over the slot batch ------------------------------
+        # -- decode tick over the running slots ---------------------------
         running = sch.running
         if running:
             b = self.ec.max_slots
@@ -312,16 +491,18 @@ class InferenceEngine:
             seeds = np.zeros((b,), np.int32)
             eidx = np.zeros((b,), np.int32)
             temps = np.zeros((b,), np.float32)
+            live = np.zeros((b,), bool)
             for slot, h in running.items():
                 tokens[slot] = h.tokens[-1]
                 pos[slot] = h.pos
                 seeds[slot] = h.seed
                 eidx[slot] = h.emitted
                 temps[slot] = h.request.sampling.temperature
-            new_cache, next_tok, norms = self._tick_fn(
+                live[slot] = True
+            new_cache, next_tok, norms = self._fns.tick(
                 self.params, self.slots.cache, jnp.asarray(tokens),
                 jnp.asarray(pos), jnp.asarray(seeds), jnp.asarray(eidx),
-                jnp.asarray(temps))
+                jnp.asarray(temps), jnp.asarray(live))
             self.slots.cache = new_cache
             toks = np.asarray(next_tok)
             norms = np.asarray(norms)
@@ -331,6 +512,33 @@ class InferenceEngine:
 
         self.t += 1
         return events
+
+    def _run_chunk(self, slot: int, h: RequestHandle,
+                   events: List[TokenEvent]) -> None:
+        """Advance one PREFILLING request by one chunk; on the final
+        chunk, record emit 0 and move the request into the decode batch.
+        """
+        offset = h.prefill_pos
+        width, nvalid = _next_chunk(h.prompt_len, offset,
+                                    self.ec.prefill_chunk)
+        first = offset == 0 and self._needs_begin
+        self._used_prefill.add((width, first))
+        fn = self._fns.prefill(width, first)
+        sp = h.request.sampling
+        new_cache, tok, norm = fn(
+            self.params, self.slots.cache, jnp.asarray(slot, jnp.int32),
+            self._chunk_batch(h.request_id, h.request, offset, width,
+                              nvalid),
+            jnp.asarray(offset, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+            jnp.asarray(h.seed, jnp.int32),
+            jnp.asarray(sp.temperature, jnp.float32))
+        self.slots.cache = new_cache
+        h.prefill_pos = offset + nvalid
+        if h.prefill_pos == h.prompt_len:
+            self._extras_dev.pop(h.request_id, None)
+            self.scheduler.mark_running(h)
+            h.pos = h.prompt_len
+            self._record(h, int(tok), norm, events)
 
     def _record(self, h: RequestHandle, token: int, norm,
                 events: List[TokenEvent]) -> None:
@@ -346,11 +554,38 @@ class InferenceEngine:
         if done:
             slot = self.scheduler.release(h)
             self.slots.reset(slot)      # eviction hook: no stale state
+            self._finished.append(h.request_id)
+            if self.ec.max_finished is not None:
+                while len(self._finished) > self.ec.max_finished:
+                    self.handles.pop(self._finished.popleft(), None)
         events.append(TokenEvent(h.request_id, token, nval, done))
+
+    # ------------------------------------------------------- handle hygiene
+    def pop_finished(self) -> Dict[int, RequestHandle]:
+        """Drain the retained FINISHED handles (request_id -> handle) and
+        drop them from ``engine.handles`` — the eviction valve that keeps
+        a long-lived engine's handle table bounded under sustained
+        traffic (see also ``EngineConfig.max_finished``)."""
+        out = {}
+        while self._finished:
+            rid = self._finished.popleft()
+            h = self.handles.pop(rid, None)
+            if h is not None:
+                out[rid] = h
+        return out
+
+    @property
+    def prefill_programs(self) -> Tuple[Tuple[int, bool], ...]:
+        """(chunk_width, runs_begin) key of every prefill program THIS
+        engine's traffic has needed — the quantity the compile-count
+        regression guard bounds: O(#buckets) when chunked, O(#distinct
+        prompt lengths) under one-shot admit."""
+        return tuple(sorted(self._used_prefill))
 
     # ------------------------------------------------------------ driving
     def stream(self, requests: Sequence[Request] = (),
                arrivals: Optional[Sequence[int]] = None,
+               _sink: Optional[Dict[int, RequestHandle]] = None,
                ) -> Iterator[Tuple[int, List[TokenEvent]]]:
         """Drive a trace to completion, yielding ``(step, events)`` per
         tick. ``arrivals[i]`` is the engine step at which ``requests[i]``
@@ -362,7 +597,9 @@ class InferenceEngine:
         pending = sorted(range(len(requests)), key=lambda i: (arr[i], i))
         while pending or self.scheduler.busy:
             while pending and arr[pending[0]] <= self.t:
-                self.submit(requests[pending.pop(0)])
+                h = self.submit(requests[pending.pop(0)])
+                if _sink is not None:
+                    _sink[h.request_id] = h
             yield self.t, self.step()
 
     def run(self, requests: Sequence[Request] = (),
@@ -370,8 +607,11 @@ class InferenceEngine:
             ) -> Dict[int, RequestHandle]:
         """Submit ``requests`` (staggered by ``arrivals``, in engine
         steps) plus anything already queued, and step until drained.
-        Returns ``request_id -> handle`` for every request the engine
-        has served."""
-        for _ in self.stream(requests, arrivals):
+        Returns ``request_id -> handle`` for the trace THIS call drove
+        (not every handle the engine ever retained — handle references
+        are captured at submission, so they survive ``max_finished``
+        eviction)."""
+        driven = {rid: h for rid, h in self.handles.items() if not h.done}
+        for _ in self.stream(requests, arrivals, _sink=driven):
             pass
-        return dict(self.handles)
+        return driven

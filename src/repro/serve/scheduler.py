@@ -10,6 +10,13 @@ separation auditable.
 
 Admission policy: FIFO over arrival order, lowest free slot first — both
 deterministic, so a replayed trace schedules identically.
+
+Lifecycle: ``QUEUED -> PREFILLING -> RUNNING -> FINISHED``. A request
+occupies its slot from admission (PREFILLING) on, but only joins the
+decode batch once its whole prompt has been prefilled — chunked prefill
+spreads that work over multiple engine steps under the engine's chunk
+budget, so one long prompt can no longer stall every occupied decode
+slot for its full prefill.
 """
 
 from __future__ import annotations
@@ -20,7 +27,8 @@ import dataclasses
 from typing import Any, Deque, Dict, List, Optional
 
 #: request lifecycle states
-QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+QUEUED, PREFILLING, RUNNING, FINISHED = (
+    "queued", "prefilling", "running", "finished")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +89,10 @@ class RequestHandle:
     # engine-internal decode bookkeeping (valid while RUNNING)
     pos: int = 0          # next cache write position (= prompt_len + emitted - 1)
     emitted: int = 0
+    # engine-internal prefill bookkeeping (valid while PREFILLING):
+    # prompt positions [0, prefill_pos) are already in the slot cache
+    prefill_pos: int = 0
+    prompt_len: int = 0
 
     @property
     def done(self) -> bool:
@@ -119,19 +131,37 @@ class SlotScheduler:
         return bool(self._free) and bool(self._queue)
 
     def admit_next(self) -> RequestHandle:
-        """Pop the oldest queued request into the lowest free slot."""
+        """Pop the oldest queued request into the lowest free slot.
+
+        The request enters PREFILLING: it owns the slot (and its pristine
+        cache row) but joins the decode batch only once the engine marks
+        it RUNNING after the last prefill chunk."""
         slot = self._free.pop(0)
         handle = self._queue.popleft()
-        handle.status = RUNNING
+        handle.status = PREFILLING
         handle.slot = slot
         self._running[slot] = handle
         return handle
+
+    def mark_running(self, handle: RequestHandle) -> None:
+        """Prefill complete: the request joins the decode batch."""
+        if handle.status != PREFILLING or self._running.get(handle.slot) is not handle:
+            raise RuntimeError(
+                f"mark_running: request {handle.request_id} is not "
+                f"prefilling in an owned slot (status={handle.status!r})")
+        handle.status = RUNNING
 
     # -------------------------------------------------------------- release
     def release(self, handle: RequestHandle) -> int:
         """Mark finished and free its slot (returned, for cache reset)."""
         slot = handle.slot
-        assert slot is not None and self._running.get(slot) is handle
+        if slot is None or self._running.get(slot) is not handle:
+            # a real exception, not an assert: the slot-ownership
+            # invariant guards cache reuse and must hold under python -O
+            raise RuntimeError(
+                f"release: request {handle.request_id} does not own slot "
+                f"{slot!r} (double release, or a handle the scheduler "
+                "never admitted)")
         del self._running[slot]
         bisect.insort(self._free, slot)
         handle.status = FINISHED
@@ -141,8 +171,18 @@ class SlotScheduler:
     # ------------------------------------------------------------- queries
     @property
     def running(self) -> Dict[int, RequestHandle]:
-        """slot -> handle for every occupied slot (insertion order)."""
-        return dict(self._running)
+        """slot -> handle for every slot in the decode batch (admission
+        order) — PREFILLING slots are excluded until their prompt is
+        fully in the cache."""
+        return {s: h for s, h in self._running.items()
+                if h.status == RUNNING}
+
+    @property
+    def prefilling(self) -> Dict[int, RequestHandle]:
+        """slot -> handle for every mid-prefill slot (admission order —
+        the engine spends its chunk budget oldest-first)."""
+        return {s: h for s, h in self._running.items()
+                if h.status == PREFILLING}
 
     @property
     def queued(self) -> int:

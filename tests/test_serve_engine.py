@@ -2,18 +2,28 @@
 
 The acceptance bar for request-level serving (the serving analogue of
 the kernels' batched-vs-loop guarantee): a request's emitted tokens AND
-its compensated logit-norm telemetry are bitwise identical whether it
-runs alone or interleaved with arbitrary other traffic under a
-staggered-arrival trace — for every registered compensation scheme,
-across slot reuse after eviction, per-request sampling seeds, and
-heterogeneous ``max_new_tokens``.
+its compensated logit-norm telemetry are bitwise identical (a) whether
+it runs alone or interleaved with arbitrary other traffic under a
+staggered-arrival trace, and (b) whether its prompt is prefilled
+one-shot or in chunks of any width/budget — for every registered
+compensation scheme, across slot reuse after (and during) eviction,
+per-request sampling seeds, and heterogeneous ``max_new_tokens``. The
+compile-count guard pins the other half of the chunked-prefill fix: the
+compiled prefill program set scales with the tail-bucket set, not with
+the number of distinct prompt lengths in the trace.
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ArchConfig, SSMConfig
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    SSMConfig,
+    VisionStubConfig,
+)
 from repro.kernels.schemes import Policy
 from repro.models import build_model
 from repro.serve import (
@@ -203,6 +213,245 @@ def test_max_new_tokens_heterogeneity(tiny_model):
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: bitwise chunked-vs-one-shot + bounded program set
+# ---------------------------------------------------------------------------
+
+def _ec(scheme="kahan", **kw):
+    return EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                        policy=Policy(scheme=scheme, unroll=2), **kw)
+
+
+@pytest.mark.parametrize("scheme", ["naive", "kahan", "pairwise", "dot2"])
+def test_chunked_vs_oneshot_bitwise(tiny_model, scheme):
+    """The chunked half of the serving contract, per scheme: the same
+    staggered mixed-length trace served with one-shot admit, chunk-4
+    prefill, and chunk-4 prefill under a 1-chunk-per-step budget yields
+    bitwise-identical tokens AND telemetry per request (the chunk
+    schedule is a pure function of the request's own prompt, so neither
+    the chunk width nor the budget's step placement can touch a
+    request's bits) — and the chunked engine still matches its solo
+    replay."""
+    cfg, model, params = tiny_model
+    reqs = _requests(cfg, [(5, 3), (8, 2), (3, 4)], seed=len(scheme))
+    arrivals = [0, 1, 2]
+
+    def serve(**kw):
+        eng = InferenceEngine(cfg, _ec(scheme, **kw), model=model,
+                              params=params)
+        return eng.run(reqs, arrivals), eng
+
+    oneshot, eng_one = serve(prefill_chunk=None)
+    for kw in ({"prefill_chunk": 4},
+               {"prefill_chunk": 4, "prefill_budget": 1}):
+        served, eng = serve(**kw)
+        for req in reqs:
+            rid = req.request_id
+            assert served[rid].tokens == oneshot[rid].tokens, (
+                f"request {rid}: tokens diverge chunked {kw} vs one-shot")
+            assert served[rid].telemetry == oneshot[rid].telemetry, (
+                f"request {rid}: telemetry diverges chunked {kw} vs "
+                "one-shot")
+    # chunked solo replay == chunked interleaved (slot-placement + budget
+    # independence compose with the chunk schedule)
+    ec4 = _ec(scheme, prefill_chunk=4)
+    served4, _ = serve(prefill_chunk=4)
+    for req in reqs:
+        solo = _solo_replay(cfg, ec4, model, params, req)
+        assert solo.tokens == served4[req.request_id].tokens
+        assert solo.telemetry == served4[req.request_id].telemetry
+    # one-shot compiled one program per distinct prompt length; chunked
+    # drew every width from the bucket set
+    assert {w for w, _ in eng_one.prefill_programs} == {5, 8, 3}
+    assert {w for w, _ in eng.prefill_programs} <= {1, 2, 4}
+
+
+def test_eviction_resets_slot_to_pristine_row(tiny_model):
+    """Eviction hygiene behind the chunked contract: after a request
+    finishes, its freed slot row reads back bitwise equal to the model's
+    pristine init row — which is what lets the next admission's first
+    chunk start from the in-slot row directly."""
+    cfg, model, params = tiny_model
+    eng = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=16,
+                                            prefill_chunk=4),
+                          model=model, params=params)
+    eng.run(_requests(cfg, [(6, 2)], seed=41))
+    pristine, _ = model.init_cache(1, 16)
+    got = eng.slots.read(0)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(pristine)):
+        assert bool(jax.numpy.array_equal(a, b))
+
+
+def test_chunked_slot_reuse_mid_prefill(tiny_model):
+    """A request prefilled in chunks into a slot another request just
+    vacated — while a third keeps decoding in the neighbouring slot —
+    still matches its solo replay bitwise (slot reset + the tick's
+    running-rows-only update keep mid-prefill rows pristine)."""
+    cfg, model, params = tiny_model
+    ec = _ec(prefill_chunk=2, prefill_budget=1)
+    reqs = _requests(cfg, [(3, 2), (6, 6), (7, 3), (5, 2)], seed=13)
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    served = eng.run(reqs)                      # 4 requests, 2 slots
+    assert all(h.done for h in served.values())
+    for req in reqs:
+        solo = _solo_replay(cfg, ec, model, params, req)
+        assert solo.tokens == served[req.request_id].tokens
+        assert solo.telemetry == served[req.request_id].telemetry
+
+
+def test_prefill_program_set_bounded(tiny_model):
+    """THE compile-count regression guard: a trace with many distinct
+    prompt lengths needs O(#buckets) prefill programs when chunked —
+    and one per distinct length under one-shot admit (the recompile
+    pathology the chunking fixes)."""
+    cfg, model, params = tiny_model
+    lengths = [3, 5, 6, 7, 9, 11, 13]
+    spec = [(p, 1) for p in lengths]
+
+    eng = InferenceEngine(cfg, _ec(prefill_chunk=4), model=model,
+                          params=params)
+    eng.run(_requests(cfg, spec, seed=17))
+    widths = {w for w, _ in eng.prefill_programs}
+    assert widths <= {1, 2, 4}, (
+        f"chunk-4 prefill must draw every program width from the bucket "
+        f"set {{1, 2, 4}}, got {sorted(widths)}")
+    assert len(eng.prefill_programs) <= 3
+
+    one = InferenceEngine(cfg, _ec(prefill_chunk=None), model=model,
+                          params=params)
+    one.run(_requests(cfg, spec, seed=17))
+    assert {w for w, _ in one.prefill_programs} == set(lengths), (
+        "one-shot admit compiles one prefill program per distinct "
+        "prompt length — the pathology the guard documents")
+
+
+def test_prefill_budget_bounds_head_of_line(tiny_model):
+    """The head-of-line fix: with a 1-chunk budget, a long prompt
+    prefills across steps while the already-running request keeps
+    emitting a token EVERY step; one-shot admit lands the long prompt's
+    whole prefill in its arrival step. Both engines emit identical
+    tokens (the budget only moves work across steps)."""
+    cfg, model, params = tiny_model
+    short = Request(prompt=np.arange(2, dtype=np.int32) + 1, request_id=0,
+                    sampling=SamplingParams(max_new_tokens=10))
+    long = Request(
+        prompt=(np.arange(9, dtype=np.int32) % cfg.vocab_size) + 3,
+        request_id=1, sampling=SamplingParams(max_new_tokens=2))
+
+    def drive(ec):
+        eng = InferenceEngine(cfg, ec, model=model, params=params)
+        per_step = {}
+        for t, events in eng.stream([short, long], arrivals=[0, 1]):
+            per_step[t] = [e.request_id for e in events]
+        return per_step, eng
+
+    budgeted, eng_b = drive(_ec(prefill_chunk=2, prefill_budget=1))
+    # long prompt = chunks (2,2,2,2,1) at steps 1..5 -> first token at 5
+    first_long = min(t for t, rids in budgeted.items() if 1 in rids)
+    assert first_long == 5
+    # the short request never starves during the long prefill
+    for t in range(1, first_long + 1):
+        assert budgeted[t].count(0) == 1, (
+            f"step {t}: running request stalled behind the long prefill")
+
+    oneshot, eng_o = drive(_ec(prefill_chunk=None))
+    assert min(t for t, rids in oneshot.items() if 1 in rids) == 1
+    assert eng_b.handles[0].tokens == eng_o.handles[0].tokens
+    assert eng_b.handles[1].tokens == eng_o.handles[1].tokens
+
+
+def test_chunk_scan_prefill_matches_parallel_prefill(tiny_model):
+    """Semantic guard against the chunk body and the one-shot path being
+    identically wrong: the shared per-position prefill body must compute
+    the same function as the families' PARALLEL ``model.prefill`` (up to
+    reassociation), including the VLM vision splice at traced positions.
+    """
+    cfg, model, params = tiny_model
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompt[None])}
+    cache, _ = model.init_cache(1, 16)
+    ref_logits, _ = model.prefill(params, batch, cache)
+    cache2, _ = model.init_cache(1, 16)
+    logits, _ = model.prefill_chunk(params, batch, cache2,
+                                    jnp.int32(0), jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=1e-4, atol=1e-4)
+
+    vcfg = ArchConfig(name="tiny-vlm", family="vlm", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=128, vision=VisionStubConfig(n_patches=4),
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64)
+    vmodel = build_model(vcfg)
+    vparams, _ = vmodel.init(jax.random.key(1))
+    vbatch = {"tokens": jnp.asarray(prompt[None]),
+              "vision_embeds": jnp.asarray(rng.standard_normal(
+                  (1, 4, 32)), jnp.float32)}
+    vc, _ = vmodel.init_cache(1, 16)
+    vref, _ = vmodel.prefill(vparams, vbatch, vc)
+    vc2, _ = vmodel.init_cache(1, 16)
+    vlog, _ = vmodel.prefill_chunk(vparams, vbatch, vc2,
+                                   jnp.int32(0), jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(vlog), np.asarray(vref),
+                               rtol=1e-4, atol=1e-4)
+
+    # encdec: prefill and the chunked path share ONE prefill_begin
+    # (encode + cross-K/V fill); the last-position logits must agree
+    ecfg = ArchConfig(name="tiny-encdec", family="encdec", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab_size=128, encoder=EncoderConfig(n_layers=1,
+                                                            n_frames=6),
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64)
+    emodel = build_model(ecfg)
+    eparams, _ = emodel.init(jax.random.key(2))
+    ebatch = {"tokens": jnp.asarray(prompt[None]),
+              "frames": jnp.asarray(rng.standard_normal((1, 6, 32)),
+                                    jnp.float32)}
+    ec1, _ = emodel.init_cache(1, 16)
+    eref, _ = emodel.prefill(eparams, ebatch, ec1)
+    ec2, _ = emodel.init_cache(1, 16)
+    ec2 = emodel.prefill_begin(eparams, ebatch, ec2)
+    elog, _ = emodel.prefill_chunk(eparams, ebatch, ec2,
+                                   jnp.int32(0), jnp.int32(7))
+    np.testing.assert_allclose(np.asarray(elog), np.asarray(eref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Finished-handle hygiene (the sustained-traffic memory leak)
+# ---------------------------------------------------------------------------
+
+def test_finished_handle_eviction_and_run_returns_driven(tiny_model):
+    """``max_finished`` bounds the retained FINISHED handles;
+    ``run`` still returns every handle of the trace IT drove (captured
+    at submission, surviving eviction); an evicted request_id may be
+    resubmitted."""
+    cfg, model, params = tiny_model
+    ec = EngineConfig(max_slots=2, max_len=16, max_finished=1)
+    eng = InferenceEngine(cfg, ec, model=model, params=params)
+    reqs = _requests(cfg, [(4, 2), (5, 2), (3, 2)], seed=29)
+    served = eng.run(reqs)
+    assert sorted(served) == [0, 1, 2]
+    assert all(h.done and len(h.tokens) == 2 for h in served.values())
+    assert len(eng.handles) == 1                 # bounded retention
+    drained = eng.pop_finished()
+    assert len(drained) == 1 and not eng.handles
+    # an evicted id is free for reuse — the engine no longer leaks ids
+    again = eng.run([reqs[0]])
+    assert again[0].done and len(again[0].tokens) == 2
+
+
+def test_pop_finished_drains_default_retention(tiny_model):
+    cfg, model, params = tiny_model
+    eng = InferenceEngine(cfg, EngineConfig(max_slots=2, max_len=16),
+                          model=model, params=params)
+    eng.run(_requests(cfg, [(4, 1), (5, 2)], seed=31))
+    assert sorted(eng.pop_finished()) == [0, 1]
+    assert eng.handles == {} and eng.pop_finished() == {}
+
+
+# ---------------------------------------------------------------------------
 # Hybrid family: ring-buffer KV + recurrent SSM state in the slot cache
 # ---------------------------------------------------------------------------
 
@@ -210,7 +459,10 @@ def test_max_new_tokens_heterogeneity(tiny_model):
 def test_hybrid_ring_and_ssm_state_bitwise():
     """The slot cache carries ring-buffer KV and SSM recurrent state;
     the scan slot loop keeps the contract even where vmap's batch
-    vectorization drifts by an ulp (the measured hybrid failure mode)."""
+    vectorization drifts by an ulp (the measured hybrid failure mode).
+    Chunked prefill rides the same contract: the 9-token prompt wraps
+    the window-8 ring buffer mid-chunk and must still match one-shot
+    admit bitwise."""
     cfg = ArchConfig(name="tiny-hybrid", family="hybrid", n_layers=2,
                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
                      vocab_size=128, sliding_window=8,
@@ -221,10 +473,20 @@ def test_hybrid_ring_and_ssm_state_bitwise():
     model = build_model(cfg)
     params, _ = model.init(jax.random.key(0))
     ec = EngineConfig(max_slots=2, max_len=16, track_stats=True,
-                      policy=Policy(scheme="kahan", unroll=2))
-    _assert_bitwise(cfg, ec, model, params,
-                    _requests(cfg, [(4, 3), (9, 2), (3, 3)], seed=2),
-                    arrivals=[0, 1, 2])
+                      policy=Policy(scheme="kahan", unroll=2),
+                      prefill_chunk=None)
+    reqs = _requests(cfg, [(4, 3), (9, 2), (3, 3)], seed=2)
+    served = _assert_bitwise(cfg, ec, model, params, reqs,
+                             arrivals=[0, 1, 2])
+    chunked = InferenceEngine(
+        cfg, EngineConfig(max_slots=2, max_len=16, track_stats=True,
+                          policy=Policy(scheme="kahan", unroll=2),
+                          prefill_chunk=4, prefill_budget=1),
+        model=model, params=params).run(reqs, arrivals=[0, 1, 2])
+    for req in reqs:
+        rid = req.request_id
+        assert chunked[rid].tokens == served[rid].tokens
+        assert chunked[rid].telemetry == served[rid].telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +500,12 @@ def test_submit_validation(tiny_model):
     with pytest.raises(ValueError, match="max_len"):
         eng.submit(Request(prompt=np.arange(8, dtype=np.int32),
                            sampling=SamplingParams(max_new_tokens=4)))
+    # an empty or mis-shaped prompt fails HERE, not as an opaque shape
+    # error deep inside the prefill trace
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(prompt=np.zeros((0,), np.int32)))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(Request(prompt=np.zeros((2, 3), np.int32)))
     eng.submit(Request(prompt=np.arange(4, dtype=np.int32), request_id=7,
                        sampling=SamplingParams(max_new_tokens=2)))
     with pytest.raises(ValueError, match="already submitted"):
@@ -249,3 +517,49 @@ def test_submit_validation(tiny_model):
     with pytest.raises(ValueError, match="max_slots"):
         InferenceEngine(cfg, EngineConfig(max_slots=0), model=model,
                         params=params)
+
+
+def test_engine_config_validation():
+    """The serving knobs validate in ``__post_init__`` alongside the
+    slot_loop check — bad values fail at construction, not mid-trace."""
+    with pytest.raises(ValueError, match="max_len"):
+        EngineConfig(max_len=0)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=0)
+    with pytest.raises(ValueError, match="prefill_budget"):
+        EngineConfig(prefill_budget=0)
+    with pytest.raises(ValueError, match="max_finished"):
+        EngineConfig(max_finished=-1)
+    # the None sentinels stay legal
+    EngineConfig(prefill_chunk=None, prefill_budget=None, max_finished=None)
+    EngineConfig(max_finished=0)
+
+
+def test_release_invariant_is_a_real_exception(tiny_model):
+    """The slot-ownership invariant survives ``python -O``: releasing a
+    handle that does not own its slot raises, it does not assert."""
+    cfg, model, params = tiny_model
+    eng = InferenceEngine(cfg, EngineConfig(max_slots=1, max_len=16),
+                          model=model, params=params)
+    served = eng.run(_requests(cfg, [(4, 1)], seed=37))
+    with pytest.raises(RuntimeError, match="does not own slot"):
+        eng.scheduler.release(served[0])        # already released
+
+
+def test_parse_trace_validation():
+    """The trace parser enforces the API-boundary contract for every
+    cell field (the holes used to surface as jit shape errors)."""
+    from repro.launch.serve import parse_trace
+
+    assert parse_trace("0:4:2,1:3:1:0.5", 0.25) == [
+        (0, 4, 2, 0.25), (1, 3, 1, 0.5)]
+    with pytest.raises(ValueError, match="arrival"):
+        parse_trace("-1:4:2", 0.0)
+    with pytest.raises(ValueError, match="prompt_len"):
+        parse_trace("0:0:2", 0.0)
+    with pytest.raises(ValueError, match="new_tokens"):
+        parse_trace("0:4:0", 0.0)
+    with pytest.raises(ValueError, match="temperature"):
+        parse_trace("0:4:2:-0.5", 0.0)
+    with pytest.raises(ValueError, match="want arrival"):
+        parse_trace("0:4", 0.0)
