@@ -16,10 +16,11 @@
 # deliberately exercise one attribute to the test module and stay
 # warnings.
 #
-# mode= gate: the legacy compensation 'mode=' kwarg was REMOVED (PR 4);
-# a grep gate fails CI if it reappears as an actual kwarg anywhere in
-# src/repro/ (comment lines and the unrelated jnp scatter mode="drop"
-# are excluded).
+# Contract gate: stage 0 runs the AST-based engine-contract linter
+# (repro.analysis) over src/repro — every clause of the numerics contract
+# (no raw psum, no legacy mode= kwarg, no uncompensated hot-path
+# reductions, no interpret= literals, ...) is machine-checked, and every
+# exemption must carry a '# contract: allow-<rule>(<reason>)' pragma.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,15 +31,8 @@ stage="${1:-all}"
 # it to a literal full-module match and miss submodules).
 DEPRECATION_GATE=(-o 'filterwarnings=error::DeprecationWarning:repro(\..*)?')
 
-echo "=== stage 0: legacy mode= grep gate (src/repro) ==="
-if grep -RnE '(^|[(,])[[:space:]]*mode=|mode: Optional\[str\]' src/repro \
-        --include='*.py' \
-        | grep -vE '^[^:]+:[0-9]+:[[:space:]]*#' \
-        | grep -v 'mode="drop"' | grep .; then
-    echo "FAIL: legacy 'mode=' kwarg reappeared in src/repro/ (use" \
-         "scheme=/Policy — see the migration note in repro.kernels.schemes)"
-    exit 1
-fi
+echo "=== stage 0: engine-contract lint (src/repro) ==="
+python -m repro.analysis --strict src/repro
 
 if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
     echo "=== stage 1: tier-1 (fast) + repro.* deprecation gate ==="

@@ -1,0 +1,68 @@
+"""repro.analysis — AST-based engine-contract linter.
+
+The repo's numerics contract ("Kahan at no extra cost" only holds while
+EVERY reduction stays on the compensated engine — see the engine-contract
+section of ROADMAP.md) used to live in prose plus one fragile grep in
+``scripts/ci.sh``. This package makes it machine-checkable: a registry of
+AST rules, each encoding one clause of the contract, runs over
+``src/repro`` and fails CI on any unannotated violation. It is the
+static-analysis analogue of the paper's method — like the ECM model turns
+performance intuition into checkable cycle tables, these rules turn the
+numerics contract into checkable findings with ``file:line`` anchors.
+
+Usage::
+
+    python -m repro.analysis --strict src/repro     # the CI gate
+    python -m repro.analysis --list-rules
+    python -m repro.analysis --rule no-raw-psum --json src/repro
+
+Intentional exceptions carry a *pragma* with a mandatory reason::
+
+    total = jnp.sum(p, axis=-1)  # contract: allow-no-uncompensated-reduction(softmax normalizer; <=L terms in fp32)
+
+or, for lines too long to annotate in place, a standalone comment
+directly above the flagged line::
+
+    # contract: allow-no-raw-psum(int32 payload psum is exact)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+
+A reason-less pragma is itself an error under ``--strict`` — exemptions
+must be auditable, and the JSON report collects them all.
+
+Adding a rule (the registry pattern, same shape as
+``repro.kernels.schemes.register``): write a checker over the annotated
+AST (a ``FileContext`` — resolved import aliases, parent links, enclosing
+functions, default-argument spans), bundle it into a ``Rule`` with an id,
+scope globs, a fix-hint, and a one-line doc, then ``rules.register`` it::
+
+    from repro.analysis import rules
+
+    def _check_no_foo(ctx):
+        for call in ctx.calls():
+            if ctx.resolve(call.func) == "jax.foo":
+                yield ctx.violation(call, "no-foo", "raw jax.foo call")
+
+    rules.register(rules.Rule(
+        id="no-foo",
+        scope=("models/*",),
+        checker=_check_no_foo,
+        fix_hint="route through ops.foo",
+        doc="jax.foo bypasses the engine's merge tree",
+    ))
+
+The rule is then selectable via ``--rule no-foo``, listed by
+``--list-rules``, pragma-escapable as ``allow-no-foo(reason)``, and runs
+in the CI gate with no edits outside the registration call.
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    FileContext,
+    LintReport,
+    Pragma,
+    Violation,
+    lint_file,
+    lint_paths,
+    lint_source,
+    parse_pragmas,
+)
+from repro.analysis.rules import Rule, get, names, register, registered  # noqa: F401

@@ -1,0 +1,76 @@
+"""CLI: ``python -m repro.analysis [paths...] [options]``.
+
+The CI gate is ``python -m repro.analysis --strict src/repro`` —
+exit 0 only when the tree has zero unannotated violations AND every
+pragma exemption parses with a non-empty reason.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import report as _report
+from repro.analysis.core import lint_paths
+from repro.analysis.rules import names
+
+
+def _default_target() -> Path:
+    """The installed repro package itself (lint ourselves when no path is
+    given — keeps `python -m repro.analysis` useful from anywhere)."""
+    return Path(__file__).resolve().parents[1]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based engine-contract linter (see ROADMAP.md "
+                    "'Contract rules (machine-checked)')")
+    p.add_argument("paths", nargs="*", type=Path,
+                   help="files or directories to lint "
+                        "(default: the repro package)")
+    p.add_argument("--strict", action="store_true",
+                   help="also fail on pragma errors (empty reasons, "
+                        "unknown rule ids) — the CI gate mode")
+    p.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                   help="run only this rule (repeatable)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the machine-readable JSON report")
+    p.add_argument("--list-rules", action="store_true",
+                   help="list registered rules and exit")
+    p.add_argument("--show-exemptions", action="store_true",
+                   help="also print every annotated exemption (the audit "
+                        "view)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        print(_report.render_rule_list())
+        return 0
+    if args.rules:
+        unknown = [r for r in args.rules if r not in names()]
+        if unknown:
+            print(f"error: unknown rule(s) {unknown}; registered: "
+                  f"{sorted(names())}", file=sys.stderr)
+            return 2
+    paths = args.paths or [_default_target()]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path(s): {[str(p) for p in missing]}",
+              file=sys.stderr)
+        return 2
+    report = lint_paths(paths, rule_ids=args.rules)
+    if args.json:
+        print(_report.render_json(report))
+    else:
+        print(_report.render_text(report, strict=args.strict,
+                                  show_exemptions=args.show_exemptions))
+    return report.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

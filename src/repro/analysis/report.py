@@ -1,0 +1,75 @@
+"""Text and JSON reporters for lint results.
+
+Text output is grep/editor-friendly ``file:line:col: rule: message``
+lines; JSON is the machine-readable artifact (stable keys — the schema
+is pinned by tests/test_analysis.py) consumed by CI tooling and the
+exemption audit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List
+
+from repro.analysis.core import LintReport
+from repro.analysis.rules import registered
+
+
+def render_text(report: LintReport, *, strict: bool = False,
+                show_exemptions: bool = False) -> str:
+    out: List[str] = []
+    for v in report.violations:
+        out.append(v.format())
+    for e in report.pragma_errors:
+        prefix = "error" if strict else "warning"
+        out.append(f"{prefix}: {e}")
+    unused = [p for p in report.exemptions if not p.used]
+    for p in unused:
+        out.append(
+            f"warning: {p.path}:{p.comment_line}: pragma "
+            f"allow-{p.rule} suppresses nothing (stale exemption?)")
+    if show_exemptions:
+        for p in report.exemptions:
+            out.append(f"exempt: {p.path}:{p.line}: {p.rule}: {p.reason}")
+    n_ex = len(report.exemptions)
+    out.append(
+        f"{report.files} file(s), {len(report.violations)} violation(s), "
+        f"{n_ex} annotated exemption(s)"
+        + (f", {len(report.pragma_errors)} pragma error(s)"
+           if report.pragma_errors else ""))
+    return "\n".join(out)
+
+
+def render_json(report: LintReport) -> str:
+    payload = {
+        "files": report.files,
+        "violations": [dataclasses.asdict(v) for v in report.violations],
+        "exemptions": [
+            {"rule": p.rule, "reason": p.reason, "path": p.path,
+             "line": p.line, "comment_line": p.comment_line,
+             "used": p.used}
+            for p in report.exemptions
+        ],
+        "pragma_errors": list(report.pragma_errors),
+        "rules": [
+            {"id": r.id, "doc": r.doc, "scope": list(r.scope),
+             "fix_hint": r.fix_hint}
+            for r in registered().values()
+        ],
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)
+
+
+def render_rule_list() -> str:
+    out = ["registered contract rules:"]
+    for r in registered().values():
+        out.append(f"  {r.id}")
+        out.append(f"      {r.doc}")
+        out.append(f"      scope: {', '.join(r.scope)}"
+                   + (f"  (excluding {', '.join(r.exclude)})"
+                      if r.exclude else ""))
+        out.append(f"      fix: {r.fix_hint}")
+    out.append("")
+    out.append("pragma escape: # contract: allow-<rule>(<non-empty reason>)")
+    return "\n".join(out)

@@ -67,5 +67,5 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
     """
     scale = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis_name)
     q = quantize(x, scale)
-    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)  # contract: allow-no-raw-psum(int32 payload — integer psum is exact and order-independent)
     return dequantize(total, scale)

@@ -95,7 +95,7 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
     (m, l_s, l_c, a_s, a_c).
     """
     barrier = jax.lax.optimization_barrier
-    s = barrier(jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+    s = barrier(jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),  # contract: allow-no-uncompensated-reduction(flash scores; compute_dtype over head_dim terms, block-local)
                                     preferred_element_type=compute_dtype))
     s = barrier(s * scale)
     q_pos = qb * block_q + jax.lax.broadcasted_iota(
@@ -111,7 +111,7 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
     corr = barrier(jnp.exp(barrier(m_old - m_new)))   # [bq, 1]
     p = barrier(jnp.exp(barrier(s - m_new)))          # [bq, bk]
     p_sum = barrier(rowsum_tree(p))
-    pv = barrier(jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+    pv = barrier(jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),  # contract: allow-no-uncompensated-reduction(flash PV block product; the scheme accumulator fold below carries the compensation)
                                      preferred_element_type=compute_dtype))
     # rescale value AND comp, then fold this k-block's contribution
     # through the scheme's accumulator update.

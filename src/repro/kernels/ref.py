@@ -139,7 +139,7 @@ def matmul_ref(a: jax.Array, b: jax.Array, bk: int = 512,
     def body(carry, xs):
         s, c = carry
         at, bt, g = xs
-        prod = jnp.dot(at.astype(cdt), bt.astype(cdt),
+        prod = jnp.dot(at.astype(cdt), bt.astype(cdt),  # contract: allow-no-uncompensated-reduction(oracle block product; scheme.update carries the compensation, mirrors the kernel)
                        preferred_element_type=cdt)
         return sch.update(s, c, prod, g), None
 

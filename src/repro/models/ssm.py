@@ -87,7 +87,7 @@ def _ssm_chunk(h0, chunk_inputs):
 
     a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
     h = b_cum + a_cum * h0[:, None]                 # [B,L,dI,dS]
-    y = jnp.einsum("blds,bls->bld", h, c) + du
+    y = jnp.einsum("blds,bls->bld", h, c) + du  # contract: allow-no-uncompensated-reduction(SSM output readout; fp32 over d_state<=64 terms)
     return h[:, -1], y
 
 
@@ -103,14 +103,14 @@ def ssm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
     dt_rank = s_cfg.dt_rank or -(-cfg.d_model // 16)
 
     xc = x.astype(cd)
-    x_in = jnp.einsum("bsd,di->bsi", xc, p["in_x"]["w"].astype(cd))
-    z = jnp.einsum("bsd,di->bsi", xc, p["in_z"]["w"].astype(cd))
+    x_in = jnp.einsum("bsd,di->bsi", xc, p["in_x"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(SSM input projection; cd accumulate, d_model terms)
+    z = jnp.einsum("bsd,di->bsi", xc, p["in_z"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(SSM gate projection; cd accumulate, d_model terms)
 
     new_cache = None
     if cache is not None and s == 1:  # decode step
         h_prev, conv_buf = cache
         window = jnp.concatenate([conv_buf, x_in], axis=1)  # [B,k,dI]
-        u = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),
+        u = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(depthwise conv window; fp32, kernel-width terms)
                        p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
         u = jax.nn.silu(u)[:, None, :]                       # [B,1,dI]
         new_conv_buf = window[:, 1:]
@@ -119,12 +119,13 @@ def ssm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
                                      p["conv_b"].astype(cd)).astype(jnp.float32))
 
     u = u.astype(jnp.float32)
-    dbc = jnp.einsum("bsi,ir->bsr", u.astype(cd), p["x_proj"]["w"].astype(cd))
+    dbc = jnp.einsum("bsi,ir->bsr", u.astype(cd), p["x_proj"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(SSM dt/B/C projection; cd accumulate, d_in terms)
     dbc = dbc.astype(jnp.float32)
     dt_in = dbc[..., :dt_rank]
     b_ssm = dbc[..., dt_rank:dt_rank + s_cfg.d_state]
     c_ssm = dbc[..., dt_rank + s_cfg.d_state:]
     dt = jax.nn.softplus(
+        # contract: allow-no-uncompensated-reduction(dt projection; fp32 over dt_rank terms)
         jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]["w"].astype(jnp.float32))
         + p["dt_proj"]["b"].astype(jnp.float32))             # [B,S,dI]
 
@@ -135,7 +136,7 @@ def ssm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
 
     if cache is not None and s == 1:
         h = decay[:, 0] * h_prev + drive[:, 0]               # [B,dI,dS]
-        y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0])[:, None, :] + du
+        y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0])[:, None, :] + du  # contract: allow-no-uncompensated-reduction(SSM decode readout; fp32 over d_state<=64 terms)
         new_cache = (h, new_conv_buf)
     else:
         # chunked scan over the sequence
@@ -171,4 +172,4 @@ def ssm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
             new_cache = (h_last, conv_buf)
 
     y = y.astype(cd) * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
-    return jnp.einsum("bsi,id->bsd", y, p["out"]["w"].astype(cd)), new_cache
+    return jnp.einsum("bsi,id->bsd", y, p["out"]["w"].astype(cd)), new_cache  # contract: allow-no-uncompensated-reduction(SSM output projection; cd accumulate, d_in terms)

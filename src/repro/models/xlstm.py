@@ -122,15 +122,17 @@ def _mlstm_chunk(state, inp):
     m_new = jnp.maximum(m_new, -1e30)                 # all -inf guard
 
     d_mat = jnp.exp(logd - m_new[..., None])          # [B,H,L,L]
-    s_mat = jnp.einsum("bhld,bhtd->bhlt", q, k) * scale * d_mat
-    h_intra = jnp.einsum("bhlt,bhtv->bhlv", s_mat, v)
+    s_mat = jnp.einsum("bhld,bhtd->bhlt", q, k) * scale * d_mat  # contract: allow-no-uncompensated-reduction(mLSTM intra-chunk scores; fp32 over head_dim terms)
+    h_intra = jnp.einsum("bhlt,bhtv->bhlv", s_mat, v)  # contract: allow-no-uncompensated-reduction(mLSTM intra-chunk mix; fp32, chunk-bounded terms)
     inter_scale = jnp.exp(m_inter - m_new)            # [B,H,L]
+    # contract: allow-no-uncompensated-reduction(mLSTM state readout; fp32 over head_dim terms)
     h_inter = jnp.einsum("bhld,bhdv->bhlv", q, c_in) * scale \
         * inter_scale[..., None]
     num = h_intra + h_inter
 
+    # contract: allow-no-uncompensated-reduction(mLSTM normalizer; fp32, chunk-bounded terms)
     n_intra = jnp.sum(s_mat, axis=-1)                 # [B,H,L]
-    n_inter = jnp.einsum("bhld,bhd->bhl", q, n_in) * scale * inter_scale
+    n_inter = jnp.einsum("bhld,bhd->bhl", q, n_in) * scale * inter_scale  # contract: allow-no-uncompensated-reduction(mLSTM normalizer readout; fp32 over head_dim terms)
     denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_new))
     h = num / denom[..., None]                        # [B,H,L,V]
 
@@ -139,9 +141,9 @@ def _mlstm_chunk(state, inp):
                         jnp.max(i_raw + total_g - b_cum, axis=-1))
     w_t = jnp.exp(i_raw + total_g - b_cum - m_out[..., None])   # [B,H,L]
     c_out = (jnp.exp(m_in + total_g[..., 0] - m_out)[..., None, None] * c_in
-             + jnp.einsum("bhl,bhld,bhlv->bhdv", w_t, k, v))
+             + jnp.einsum("bhl,bhld,bhlv->bhdv", w_t, k, v))  # contract: allow-no-uncompensated-reduction(mLSTM state update; fp32, chunk-bounded terms)
     n_out = (jnp.exp(m_in + total_g[..., 0] - m_out)[..., None] * n_in
-             + jnp.einsum("bhl,bhld->bhd", w_t, k))
+             + jnp.einsum("bhl,bhld->bhd", w_t, k))  # contract: allow-no-uncompensated-reduction(mLSTM normalizer update; fp32, chunk-bounded terms)
     return (c_out, n_out, m_out), h
 
 
@@ -159,14 +161,14 @@ def mlstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
     kv = d_in // h_heads
 
     xn = norm_apply(p["norm"], x, "rmsnorm").astype(cd)
-    u = jnp.einsum("bsd,di->bsi", xn, p["up_u"]["w"].astype(cd))
-    z = jnp.einsum("bsd,di->bsi", xn, p["up_z"]["w"].astype(cd))
+    u = jnp.einsum("bsd,di->bsi", xn, p["up_u"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(mLSTM up-projection; cd accumulate, d_model terms)
+    z = jnp.einsum("bsd,di->bsi", xn, p["up_z"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(mLSTM up-projection; cd accumulate, d_model terms)
 
     decode = cache is not None and s == 1
     if decode:
         c_st, n_st, m_st, conv_buf = cache
         win = jnp.concatenate([conv_buf, u], axis=1)
-        cu = jnp.einsum("bki,ki->bi", win.astype(jnp.float32),
+        cu = jnp.einsum("bki,ki->bi", win.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(depthwise conv window; fp32, kernel-width terms)
                         p["conv_w"].astype(jnp.float32)) \
             + p["conv_b"].astype(jnp.float32)
         cu = jax.nn.silu(cu)[:, None, :].astype(cd)
@@ -176,10 +178,10 @@ def mlstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
                                       p["conv_b"].astype(cd))
                          .astype(jnp.float32)).astype(cd)
 
-    q = jnp.einsum("bsi,ik->bsk", cu, p["wq"]["w"].astype(cd))
-    k = jnp.einsum("bsi,ik->bsk", cu, p["wk"]["w"].astype(cd))
-    v = jnp.einsum("bsi,ik->bsk", u, p["wv"]["w"].astype(cd))
-    gates = jnp.einsum("bsi,ig->bsg", cu.astype(jnp.float32),
+    q = jnp.einsum("bsi,ik->bsk", cu, p["wq"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(QKV projection; cd accumulate, d_in terms)
+    k = jnp.einsum("bsi,ik->bsk", cu, p["wk"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(QKV projection; cd accumulate, d_in terms)
+    v = jnp.einsum("bsi,ik->bsk", u, p["wv"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(QKV projection; cd accumulate, d_in terms)
+    gates = jnp.einsum("bsi,ig->bsg", cu.astype(jnp.float32),  # contract: allow-no-uncompensated-reduction(gate pre-activations; fp32 over d_in terms)
                        p["w_if"]["w"]) + p["w_if"]["b"]
     i_raw = gates[..., :h_heads].transpose(0, 2, 1)   # [B,H,S]
     f_raw = gates[..., h_heads:].transpose(0, 2, 1)
@@ -230,7 +232,7 @@ def mlstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
     h_flat = hh.transpose(0, 2, 1, 3).reshape(b, s, d_in).astype(cd)
     h_flat = norm_apply(p["out_norm"], h_flat, "rmsnorm")
     h_gated = h_flat * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
-    out = jnp.einsum("bsi,id->bsd", h_gated, p["down"]["w"].astype(cd))
+    out = jnp.einsum("bsi,id->bsd", h_gated, p["down"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(mLSTM down-projection; cd accumulate, d_in terms)
     return out, new_cache
 
 
@@ -279,7 +281,7 @@ def _slstm_step(p, cfg, carry, wx_t):
     b = h.shape[0]
     heads = cfg.n_heads
     dh = h.shape[1] // heads
-    rh = jnp.einsum("bhd,hdg->bhg", h.reshape(b, heads, dh), p["r"])
+    rh = jnp.einsum("bhd,hdg->bhg", h.reshape(b, heads, dh), p["r"])  # contract: allow-no-uncompensated-reduction(sLSTM recurrent product; fp32 over head_dim terms)
     rh = rh.reshape(b, heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * heads * dh)
     # gate layout after transpose: [z | i | f | o] each [B,d]
     pre = wx_t + rh
@@ -304,7 +306,7 @@ def slstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
     cd = _dtype(cfg.compute_dtype)
     b, s, d = x.shape
     xn = norm_apply(p["norm"], x, "rmsnorm").astype(cd)
-    wx = jnp.einsum("bsd,dg->bsg", xn, p["w"]["w"].astype(cd))
+    wx = jnp.einsum("bsd,dg->bsg", xn, p["w"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(sLSTM input projection; cd accumulate, d_model terms)
     wx = wx.astype(jnp.float32) + p["w"]["b"]
     # reorder [z|i|f|o] interleaved per head for the recurrent add: keep
     # canonical [z|i|f|o] over full d — r-product is transposed to match.
@@ -324,9 +326,9 @@ def slstm_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
     new_cache = carry if cache is not None else None
 
     # gated FFN (proj factor 4/3)
-    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h_seq,
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h_seq,  # contract: allow-no-uncompensated-reduction(gated FFN up-projection; cd accumulate, d_model terms)
                                p["up_g"]["w"].astype(cd))
                     .astype(jnp.float32)).astype(cd)
-    u = jnp.einsum("bsd,df->bsf", h_seq, p["up_u"]["w"].astype(cd))
-    out = jnp.einsum("bsf,fd->bsd", g * u, p["down"]["w"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", h_seq, p["up_u"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(gated FFN up-projection; cd accumulate, d_model terms)
+    out = jnp.einsum("bsf,fd->bsd", g * u, p["down"]["w"].astype(cd))  # contract: allow-no-uncompensated-reduction(gated FFN down-projection; cd accumulate, d_ff terms)
     return out, new_cache

@@ -4,7 +4,9 @@ from repro.optim.adamw import (  # noqa: F401
     AdamWConfig,
     OptState,
     apply_update,
+    engine_sq_norm,
     global_norm,
+    global_norm_ref,
     init,
     opt_state_specs,
 )

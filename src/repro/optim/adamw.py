@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kahan import kahan_step, tree_kahan_sq_norm
+from repro.kernels.engine import CompensatedReduction, merge_accumulators
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,11 +68,34 @@ def opt_state_specs(params_specs: Any, cfg: AdamWConfig) -> OptState:
     return OptState(step=P(), m=params_specs, v=params_specs, comp=comp_spec)
 
 
+def engine_sq_norm(grads: Any) -> jax.Array:
+    """Sum of squares of every leaf through the engine's compensated fold.
+
+    Each leaf's squares go through ``sum_accumulators`` (the same kernel
+    path as ``ops.asum``), the per-leaf ``(s, c)`` grids concatenate, and
+    ONE ``merge_accumulators`` tree collapses them — so the cross-leaf
+    fold shares the deterministic merge order used everywhere else in the
+    engine instead of Python's left-to-right ``sum()``.
+    """
+    eng = CompensatedReduction()
+    accs = [eng.sum_accumulators(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)]
+    s = jnp.concatenate([a.s.reshape(-1) for a in accs])
+    c = jnp.concatenate([a.c.reshape(-1) for a in accs])
+    return merge_accumulators(s, c)
+
+
 def global_norm(cfg: AdamWConfig, grads: Any) -> jax.Array:
     if cfg.kahan_norm:
         return jnp.sqrt(tree_kahan_sq_norm(grads))
+    return jnp.sqrt(engine_sq_norm(grads))
+
+
+def global_norm_ref(grads: Any) -> jax.Array:
+    """Uncompensated oracle for the engine-folded global norm (kept for
+    the tolerance test in tests/test_optim.py)."""
     leaves = jax.tree.leaves(grads)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))  # contract: allow-no-uncompensated-reduction(reference oracle for engine_sq_norm; not a hot path)
                         for g in leaves))
 
 

@@ -247,7 +247,7 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
         return cache[key]
 
     vocab = cfg.vocab_size
-    base_key = jax.random.key(ec.sample_seed)
+    base_key = jax.random.key(ec.sample_seed)  # contract: allow-no-raw-prngkey(the engine IS the key boundary — requests fold_in from this root)
 
     def sample_row(logits_row, key, temp):
         """Per-request sampling: greedy at temp<=0, categorical above.
@@ -385,7 +385,7 @@ class InferenceEngine:
                        else _schemes.current_policy())
         self.model = model if model is not None else build_model(cfg)
         if params is None:
-            params, _ = self.model.init(jax.random.key(seed))
+            params, _ = self.model.init(jax.random.key(seed))  # contract: allow-no-raw-prngkey(engine-owned init root from the config seed — the serving boundary)
         self.params = params
         self.slots = SlotKVCache(self.model, ec.max_slots, ec.max_len)
         self.scheduler = SlotScheduler(ec.max_slots)

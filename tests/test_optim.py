@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim import AdamWConfig, apply_update, global_norm
+from repro.optim import (AdamWConfig, apply_update, engine_sq_norm,
+                         global_norm, global_norm_ref)
 from repro.optim import init as opt_init
 from repro.optim.schedule import warmup_cosine
 
@@ -69,6 +70,41 @@ def test_global_norm_kahan_matches_fp64():
     want = float(np.sqrt(sum((np.asarray(v, np.float64) ** 2).sum()
                              for v in tree.values())))
     assert abs(got - want) / want < 1e-6
+
+
+def test_global_norm_engine_fold_matches_oracle():
+    """kahan_norm=False routes through the engine's compensated fold
+    (per-leaf sum_accumulators of squares + ONE merge_accumulators tree);
+    it must agree with the old raw-jnp.sum oracle to fp32 tolerance and
+    with an fp64 reference even more tightly."""
+    rng = np.random.default_rng(7)
+    tree = {"a": jnp.asarray(rng.standard_normal((64, 128)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((1000,)), jnp.float32),
+            "c": jnp.asarray(rng.standard_normal((3, 5, 7)), jnp.bfloat16)}
+    cfg = AdamWConfig(kahan_norm=False)
+    got = float(global_norm(cfg, tree))
+    oracle = float(global_norm_ref(tree))
+    # the merge tree reorders the fold, so bitwise equality is not
+    # expected — but both accumulate in fp32 and must agree tightly
+    assert got > 0.0
+    assert abs(got - oracle) / oracle < 1e-6, (got, oracle)
+    want = float(np.sqrt(sum(
+        (np.asarray(v, np.float64) ** 2).sum() for v in tree.values())))
+    assert abs(got - want) / want < 1e-6, (got, want)
+    # engine_sq_norm is the square of the norm
+    assert abs(float(engine_sq_norm(tree)) - got ** 2) / got ** 2 < 1e-6
+
+
+def test_global_norm_engine_fold_in_metrics():
+    """apply_update with kahan_norm=False produces a finite grad_norm via
+    the engine fold (the path is jit-compatible)."""
+    cfg = AdamWConfig(lr=1e-3, kahan=False, kahan_norm=False, grad_clip=1.0)
+    p = {"w": jnp.ones((32,), jnp.float32)}
+    s = opt_init(cfg, p)
+    g = {"w": jnp.full((32,), 0.25)}
+    _, _, metrics = jax.jit(lambda p, g, s: apply_update(cfg, p, g, s))(p, g, s)
+    want = float(np.sqrt(32 * 0.25 ** 2))
+    assert abs(float(metrics["grad_norm"]) - want) < 1e-5
 
 
 def test_schedule_warmup_and_decay():
