@@ -21,6 +21,14 @@
 # (no raw psum, no legacy mode= kwarg, no uncompensated hot-path
 # reductions, no interpret= literals, ...) is machine-checked, and every
 # exemption must carry a '# contract: allow-<rule>(<reason>)' pragma.
+# The --budget pin is the exemption RATCHET: the run fails the moment
+# the pragma count exceeds it, so adding an exemption means raising the
+# number here in the same commit — a deliberate, reviewable act.
+# Stage 0b re-audits the contract at the IR level: the registered entry
+# points (repro.analysis.targets) are traced to jaxprs/HLO and checked
+# for what source text cannot prove (no psum primitive however spelled,
+# barriers surviving lowering, the decode tick compiling to a slot scan,
+# the O(#buckets) prefill program bound). Budget: < 60 s.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -32,7 +40,10 @@ stage="${1:-all}"
 DEPRECATION_GATE=(-o 'filterwarnings=error::DeprecationWarning:repro(\..*)?')
 
 echo "=== stage 0: engine-contract lint (src/repro) ==="
-python -m repro.analysis --strict src/repro
+python -m repro.analysis --strict --budget 65 src/repro
+
+echo "=== stage 0b: engine-contract trace audit (jaxpr/HLO) ==="
+python -m repro.analysis --trace --strict
 
 if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
     echo "=== stage 1: tier-1 (fast) + repro.* deprecation gate ==="

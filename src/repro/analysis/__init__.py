@@ -1,20 +1,40 @@
-"""repro.analysis — AST-based engine-contract linter.
+"""repro.analysis — two-level engine-contract auditor (AST + trace).
 
 The repo's numerics contract ("Kahan at no extra cost" only holds while
 EVERY reduction stays on the compensated engine — see the engine-contract
 section of ROADMAP.md) used to live in prose plus one fragile grep in
-``scripts/ci.sh``. This package makes it machine-checkable: a registry of
-AST rules, each encoding one clause of the contract, runs over
-``src/repro`` and fails CI on any unannotated violation. It is the
-static-analysis analogue of the paper's method — like the ECM model turns
-performance intuition into checkable cycle tables, these rules turn the
-numerics contract into checkable findings with ``file:line`` anchors.
+``scripts/ci.sh``. This package makes it machine-checkable at TWO levels:
 
-Usage::
+* **AST rules** (:mod:`repro.analysis.rules`) encode the *source-text*
+  clauses: a registry of checkers over annotated ASTs runs over
+  ``src/repro`` and fails CI on any unannotated violation. It is the
+  static-analysis analogue of the paper's method — like the ECM model
+  turns performance intuition into checkable cycle tables, these rules
+  turn the numerics contract into checkable ``file:line`` findings.
+* **Trace rules** (:mod:`repro.analysis.trace`) encode the
+  *compiled-truth* clauses: the registered entry points in
+  :mod:`repro.analysis.targets` (ops kernels, flash attention, the
+  serve decode tick and every prefill-chunk bucket program, sharded
+  collectives, the optimizer grad-norm) are traced with
+  ``jax.make_jaxpr`` — and, for HLO-tagged targets, lowered — then
+  audited for properties source text cannot prove: no raw ``psum``
+  primitive however it was spelled, compensation barriers pinned in
+  the traced scan bodies and surviving lowering, the decode tick
+  compiling to a length-``max_slots`` scan, fp32 accumulator avals,
+  no host callbacks, and the O(#buckets) prefill program-count bound.
 
-    python -m repro.analysis --strict src/repro     # the CI gate
-    python -m repro.analysis --list-rules
+Both levels share one report schema (``Violation`` / ``Pragma`` /
+``LintReport``), one exemption-audit trail, and one CLI::
+
+    python -m repro.analysis --strict --budget N src/repro  # CI stage 0
+    python -m repro.analysis --trace --strict               # CI stage 0b
+    python -m repro.analysis --trace --target serve.decode_tick --json
+    python -m repro.analysis --list-rules [--trace]
     python -m repro.analysis --rule no-raw-psum --json src/repro
+
+``--budget N`` is the exemption ratchet: the run fails once the
+annotated-exemption count exceeds the number pinned in
+``scripts/ci.sh``, so new pragmas are a deliberate decision, not drift.
 
 Intentional exceptions carry a *pragma* with a mandatory reason::
 
@@ -53,6 +73,16 @@ scope globs, a fix-hint, and a one-line doc, then ``rules.register`` it::
 The rule is then selectable via ``--rule no-foo``, listed by
 ``--list-rules``, pragma-escapable as ``allow-no-foo(reason)``, and runs
 in the CI gate with no edits outside the registration call.
+
+Trace rules and targets follow the same registry pattern
+(``trace.register(TraceRule(...))`` / ``targets.register(Target(...))``);
+a trace rule applies to every target sharing one of its tags, and a
+target opts out of a rule with ``exempt={"rule-id": "reason"}`` — the
+exemption shows up in the report's audit trail exactly like a pragma.
+
+NOTE: importing :mod:`repro.analysis` (or the AST layer) stays
+dependency-light; the trace layer imports jax and is loaded lazily by
+the CLI only under ``--trace``.
 """
 
 from repro.analysis.core import (  # noqa: F401

@@ -1,13 +1,26 @@
 """CLI: ``python -m repro.analysis [paths...] [options]``.
 
-The CI gate is ``python -m repro.analysis --strict src/repro`` —
-exit 0 only when the tree has zero unannotated violations AND every
-pragma exemption parses with a non-empty reason.
+Two audit levels share one report schema and one exit-code contract:
+
+* **AST mode** (default) lints source text: ``python -m repro.analysis
+  --strict src/repro`` is CI stage 0 — exit 0 only when the tree has
+  zero unannotated violations AND every pragma exemption parses with a
+  non-empty reason.  ``--budget N`` additionally fails when the
+  annotated-exemption count exceeds N (the ratchet: the pinned number
+  in scripts/ci.sh can only be raised deliberately).
+* **Trace mode** (``--trace``) audits what actually compiles: the
+  registered entry points in :mod:`repro.analysis.targets` are traced
+  to jaxprs (and, where registered, lowered to HLO) and checked
+  against the trace rules in :mod:`repro.analysis.trace`.  CI stage 0b
+  is ``python -m repro.analysis --trace --strict``.  ``--target ID``
+  restricts the audit (repeatable); paths are meaningless here and
+  rejected.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from pathlib import Path
 from typing import List, Optional
@@ -26,50 +39,110 @@ def _default_target() -> Path:
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="AST-based engine-contract linter (see ROADMAP.md "
+        description="engine-contract auditor: AST rules over source "
+                    "text, trace rules over jaxprs/HLO (see ROADMAP.md "
                     "'Contract rules (machine-checked)')")
     p.add_argument("paths", nargs="*", type=Path,
                    help="files or directories to lint "
-                        "(default: the repro package)")
+                        "(default: the repro package; AST mode only)")
     p.add_argument("--strict", action="store_true",
                    help="also fail on pragma errors (empty reasons, "
                         "unknown rule ids) — the CI gate mode")
     p.add_argument("--rule", action="append", dest="rules", metavar="ID",
                    help="run only this rule (repeatable)")
+    p.add_argument("--trace", action="store_true",
+                   help="audit compiled jaxprs/HLO of the registered "
+                        "targets instead of source text")
+    p.add_argument("--target", action="append", dest="targets",
+                   metavar="ID",
+                   help="audit only this trace target (repeatable; "
+                        "implies --trace)")
+    p.add_argument("--budget", type=int, metavar="N",
+                   help="fail when the annotated-exemption count "
+                        "exceeds N (the ratchet)")
     p.add_argument("--json", action="store_true",
                    help="emit the machine-readable JSON report")
     p.add_argument("--list-rules", action="store_true",
-                   help="list registered rules and exit")
+                   help="list registered rules (and, with --trace, "
+                        "targets) and exit")
     p.add_argument("--show-exemptions", action="store_true",
                    help="also print every annotated exemption (the audit "
                         "view)")
     return p
 
 
+def _path_problems(paths: List[Path]) -> List[str]:
+    """Validate EVERY path up front — one run reports them all, rather
+    than failing on the first and hiding the rest."""
+    problems: List[str] = []
+    for p in paths:
+        if not p.exists():
+            problems.append(f"no such path: {p}")
+        elif p.is_dir():
+            if not os.access(p, os.R_OK | os.X_OK):
+                problems.append(f"directory not readable: {p}")
+        elif not os.access(p, os.R_OK):
+            problems.append(f"file not readable: {p}")
+    return problems
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
-    if args.list_rules:
-        print(_report.render_rule_list())
-        return 0
-    if args.rules:
-        unknown = [r for r in args.rules if r not in names()]
-        if unknown:
-            print(f"error: unknown rule(s) {unknown}; registered: "
-                  f"{sorted(names())}", file=sys.stderr)
+    if args.targets:
+        args.trace = True
+
+    if args.trace:
+        # imported lazily: trace mode pulls in jax; plain AST lints stay
+        # dependency-light and fast.
+        from repro.analysis import targets as _targets
+        from repro.analysis import trace as _trace
+        if args.list_rules:
+            print(_report.render_trace_list(
+                _trace.registered().values(),
+                _targets.registered().values()))
+            return 0
+        problems = [f"unknown trace rule: {r} (registered: "
+                    f"{sorted(_trace.names())})"
+                    for r in (args.rules or []) if r not in _trace.names()]
+        problems += [f"unknown trace target: {t} (registered: "
+                     f"{sorted(_targets.names())})"
+                     for t in (args.targets or [])
+                     if t not in _targets.names()]
+        if args.paths:
+            problems.append(
+                "--trace audits the registered targets, not paths "
+                f"(got: {[str(p) for p in args.paths]})")
+        if problems:
+            for msg in problems:
+                print(f"error: {msg}", file=sys.stderr)
             return 2
-    paths = args.paths or [_default_target()]
-    missing = [p for p in paths if not p.exists()]
-    if missing:
-        print(f"error: no such path(s): {[str(p) for p in missing]}",
-              file=sys.stderr)
-        return 2
-    report = lint_paths(paths, rule_ids=args.rules)
+        report = _trace.audit(target_ids=args.targets, rule_ids=args.rules)
+        rules = _trace.select(args.rules)
+    else:
+        if args.list_rules:
+            print(_report.render_rule_list())
+            return 0
+        problems = [f"unknown rule: {r} (registered: {sorted(names())})"
+                    for r in (args.rules or []) if r not in names()]
+        paths = args.paths or [_default_target()]
+        problems += _path_problems(paths)
+        if problems:
+            for msg in problems:
+                print(f"error: {msg}", file=sys.stderr)
+            return 2
+        report = lint_paths(paths, rule_ids=args.rules)
+        rules = None  # render_json defaults to the AST registry
+
     if args.json:
-        print(_report.render_json(report))
+        print(_report.render_json(report, budget=args.budget, rules=rules))
     else:
         print(_report.render_text(report, strict=args.strict,
-                                  show_exemptions=args.show_exemptions))
-    return report.exit_code(strict=args.strict)
+                                  show_exemptions=args.show_exemptions,
+                                  budget=args.budget))
+    rc = report.exit_code(strict=args.strict)
+    if rc == 0 and not _report.budget_ok(report, args.budget):
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":

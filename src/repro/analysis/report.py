@@ -10,14 +10,21 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import List
+from typing import Iterable, List, Optional
 
 from repro.analysis.core import LintReport
 from repro.analysis.rules import registered
 
 
+def budget_ok(report: LintReport, budget: Optional[int]) -> bool:
+    """True when the annotated-exemption count fits the ratchet budget
+    (or no budget was requested)."""
+    return budget is None or len(report.exemptions) <= budget
+
+
 def render_text(report: LintReport, *, strict: bool = False,
-                show_exemptions: bool = False) -> str:
+                show_exemptions: bool = False,
+                budget: Optional[int] = None) -> str:
     out: List[str] = []
     for v in report.violations:
         out.append(v.format())
@@ -33,6 +40,14 @@ def render_text(report: LintReport, *, strict: bool = False,
         for p in report.exemptions:
             out.append(f"exempt: {p.path}:{p.line}: {p.rule}: {p.reason}")
     n_ex = len(report.exemptions)
+    if budget is not None:
+        if n_ex > budget:
+            out.append(
+                f"error: {n_ex} annotated exemption(s) exceed the budget "
+                f"of {budget} — remove a pragma (or raise the ratchet "
+                f"deliberately in scripts/ci.sh)")
+        else:
+            out.append(f"exemption budget: {n_ex}/{budget}")
     out.append(
         f"{report.files} file(s), {len(report.violations)} violation(s), "
         f"{n_ex} annotated exemption(s)"
@@ -41,7 +56,20 @@ def render_text(report: LintReport, *, strict: bool = False,
     return "\n".join(out)
 
 
-def render_json(report: LintReport) -> str:
+def _rule_entry(r) -> dict:
+    # AST rules carry ``scope`` (path globs); trace rules carry ``tags``
+    # (target-tag selectors). Both render under the "scope" key.
+    scope = getattr(r, "scope", None)
+    if scope is None:
+        scope = getattr(r, "tags", ())
+    return {"id": r.id, "doc": r.doc, "scope": list(scope),
+            "fix_hint": r.fix_hint}
+
+
+def render_json(report: LintReport, *, budget: Optional[int] = None,
+                rules: Optional[Iterable] = None) -> str:
+    rule_objs = list(rules) if rules is not None else \
+        list(registered().values())
     payload = {
         "files": report.files,
         "violations": [dataclasses.asdict(v) for v in report.violations],
@@ -52,11 +80,12 @@ def render_json(report: LintReport) -> str:
             for p in report.exemptions
         ],
         "pragma_errors": list(report.pragma_errors),
-        "rules": [
-            {"id": r.id, "doc": r.doc, "scope": list(r.scope),
-             "fix_hint": r.fix_hint}
-            for r in registered().values()
-        ],
+        "rules": [_rule_entry(r) for r in rule_objs],
+        "budget": {
+            "limit": budget,
+            "exemptions": len(report.exemptions),
+            "ok": budget_ok(report, budget),
+        },
     }
     return json.dumps(payload, indent=2, sort_keys=True)
 
@@ -72,4 +101,24 @@ def render_rule_list() -> str:
         out.append(f"      fix: {r.fix_hint}")
     out.append("")
     out.append("pragma escape: # contract: allow-<rule>(<non-empty reason>)")
+    return "\n".join(out)
+
+
+def render_trace_list(rules: Iterable, targets: Iterable) -> str:
+    """``--trace --list-rules`` view: trace rules plus the target registry."""
+    out = ["registered trace rules:"]
+    for r in rules:
+        out.append(f"  {r.id}")
+        out.append(f"      {r.doc}")
+        out.append(f"      applies to tags: {', '.join(r.tags)}")
+        out.append(f"      fix: {r.fix_hint}")
+    out.append("")
+    out.append("registered trace targets:")
+    for t in targets:
+        out.append(f"  {t.id}  [{', '.join(t.tags)}]")
+        out.append(f"      {t.doc}")
+        for rule_id, reason in sorted(t.exempt.items()):
+            out.append(f"      exempt {rule_id}: {reason}")
+    out.append("")
+    out.append("exemption escape: Target(..., exempt={'<rule>': '<reason>'})")
     return "\n".join(out)

@@ -16,15 +16,17 @@ no-legacy-mode-kwarg        the mode= kwarg was removed in PR 4 (AST-accurate
                             successor to the old ci.sh grep: the .at[...]
                             scatter ``mode="drop"`` resolves as a scatter and
                             needs no special-case exclusion)
-no-uncompensated-reduction  jnp.sum/dot/matmul/einsum + lax.dot_general in
-                            hot-path packages route through ops.* or carry an
+no-uncompensated-reduction  jnp.sum/dot/matmul/einsum/mean/cumsum/
+                            linalg.norm + lax.dot_general in hot-path
+                            packages route through ops.* or carry an
                             annotated exemption
 no-literal-interpret        interpret=True/False literals bypass
                             engine.resolve_interpret, the single authority
 no-hardcoded-accum-dtype    kernel bodies/oracles accumulate in the resolved
                             Policy.compute_dtype, not a hardcoded jnp dtype
-no-host-sync-in-trace       .item()/float()/int() on traced values inside
-                            decode/prefill bodies force a device sync (and
+no-host-sync-in-trace       .item()/.block_until_ready() anywhere in scope,
+                            and float()/int()/np.asarray() inside decode/
+                            prefill bodies, force a device sync (and
                             int/float of a tracer is a trace error)
 no-raw-prngkey              PRNG keys are created at boundary modules only
                             (train/launch/config); everything else fold_ins
@@ -129,12 +131,14 @@ def select(rule_ids: Optional[Iterable[str]]) -> List[Rule]:
 HOT_SCOPE = ("kernels/*", "serve/*", "models/*", "optim/*", "distributed/*")
 
 #: the jnp reduction entry points the contract covers (matmul-shaped
-#: contractions and full/axis sums); lax.dot_general is checked too.
+#: contractions, full/axis sums, and the sum-derived reductions mean/
+#: cumsum); lax.dot_general and jnp.linalg.norm are checked too.
 JNP_REDUCTIONS = ("sum", "dot", "matmul", "einsum", "vdot", "tensordot",
-                  "inner")
+                  "inner", "mean", "cumsum")
 
 _JNP_REDUCTION_NAMES = frozenset(
-    f"jax.numpy.{r}" for r in JNP_REDUCTIONS)
+    f"jax.numpy.{r}" for r in JNP_REDUCTIONS) | frozenset(
+    ("jax.numpy.linalg.norm",))
 _DOT_GENERAL_NAMES = frozenset(("jax.lax.dot_general",))
 _PSUM_NAMES = frozenset(
     ("jax.lax.psum", "jax.lax.pmean", "jax.lax.psum_scatter"))
@@ -145,7 +149,7 @@ def _check_uncompensated_reduction(ctx: FileContext) -> Iterator[Violation]:
     for call in ctx.calls():
         name = ctx.resolve(call.func)
         if name in _JNP_REDUCTION_NAMES:
-            short = name.rsplit(".", 1)[1]
+            short = name.split("jax.numpy.", 1)[1]
             yield ctx.violation(
                 call, "no-uncompensated-reduction",
                 f"raw jnp.{short} reduction off the compensated engine")
@@ -239,6 +243,11 @@ def _check_hardcoded_accum_dtype(ctx: FileContext) -> Iterator[Violation]:
 _TRACE_BODY_MARKERS = ("decode", "prefill")
 
 
+def _in_trace_body(ctx: FileContext, node: ast.AST) -> bool:
+    return any(m in fn for fn in ctx.enclosing_functions(node)
+               for m in _TRACE_BODY_MARKERS)
+
+
 def _check_host_sync(ctx: FileContext) -> Iterator[Violation]:
     for call in ctx.calls():
         func = call.func
@@ -246,15 +255,25 @@ def _check_host_sync(ctx: FileContext) -> Iterator[Violation]:
             yield ctx.violation(
                 call, "no-host-sync-in-trace",
                 ".item() forces a device sync (and fails on tracers)")
+        elif isinstance(func, ast.Attribute) \
+                and func.attr == "block_until_ready":
+            yield ctx.violation(
+                call, "no-host-sync-in-trace",
+                ".block_until_ready() forces a device sync (and fails "
+                "on tracers)")
         elif isinstance(func, ast.Name) and func.id in ("float", "int"):
             if call.args and not isinstance(call.args[0], ast.Constant):
-                enclosing = ctx.enclosing_functions(call)
-                if any(m in fn for fn in enclosing
-                       for m in _TRACE_BODY_MARKERS):
+                if _in_trace_body(ctx, call):
                     yield ctx.violation(
                         call, "no-host-sync-in-trace",
                         f"{func.id}() on a non-literal inside a "
                         f"decode/prefill body syncs (or breaks) the trace")
+        elif ctx.resolve(func) == "numpy.asarray" \
+                and _in_trace_body(ctx, call):
+            yield ctx.violation(
+                call, "no-host-sync-in-trace",
+                "np.asarray() inside a decode/prefill body pulls the "
+                "value to host — a device sync per trace entry")
 
 
 def _check_raw_prngkey(ctx: FileContext) -> Iterator[Violation]:
@@ -343,8 +362,9 @@ for _rule in (
         checker=_check_host_sync,
         fix_hint="keep the value on device (jnp ops / lax.select); sync "
                  "only at the engine's host-side emit points",
-        doc="decode/prefill bodies never .item()/float()/int() traced "
-            "values — recompile + sync hazard",
+        doc="decode/prefill bodies never .item()/.block_until_ready()/"
+            "float()/int()/np.asarray() traced values — recompile + sync "
+            "hazard",
     ),
     Rule(
         id="no-raw-prngkey",

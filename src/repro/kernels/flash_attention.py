@@ -124,6 +124,40 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
     return m_new, l_s, l_c, a_s, a_c
 
 
+def flash_block_probe(scheme=None, *, block_q: int = 8, block_k: int = 8,
+                      dh: int = 8, kv_len: int = 8, causal: bool = True,
+                      compute_dtype=None):
+    """(callable, abstract args) for tracing ONE block body standalone.
+
+    The trace auditor (``repro.analysis.trace``) traces this and asserts
+    the resulting primitive sequence appears contiguously in BOTH the
+    Pallas kernel's and the jnp oracle's jaxprs — the compiled-truth form
+    of the shared-block-body discipline documented on
+    ``flash_block_update``. Abstract ``ShapeDtypeStruct`` args (never
+    weak-typed literals) so the standalone trace is equation-for-equation
+    the one the kernel and oracle embed.
+    """
+    from repro.kernels import schemes as _schemes
+
+    sch = _schemes.resolve_scheme(scheme)
+    cdt = _schemes.resolve_compute_dtype(compute_dtype)
+    s = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    args = (s((block_q, dh), cdt), s((block_k, dh), cdt),
+            s((block_k, dh), cdt), s((block_q, 1), cdt),
+            s((block_q, 1), cdt), s((block_q, 1), cdt),
+            s((block_q, dh), cdt), s((block_q, dh), cdt),
+            s((), i32), s((), i32), s((), i32))
+
+    def run(q, k, v, m_old, l_s, l_c, a_s, a_c, qb, kb, step):
+        return flash_block_update(
+            sch, q, k, v, m_old, l_s, l_c, a_s, a_c, qb=qb, kb=kb,
+            step=step, block_q=block_q, block_k=block_k, kv_len=kv_len,
+            causal=causal, scale=dh ** -0.5, compute_dtype=cdt)
+
+    return run, args
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, ls_out, lc_out, as_out, ac_out,
                   m_scr, l_scr, lc_scr, acc_scr, accc_scr, *,
                   scheme: CompensationScheme, causal: bool, block_q: int,

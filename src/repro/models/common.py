@@ -13,6 +13,9 @@
   by a fixed-width token chunk starting at an arbitrary offset, one
   position at a time through ONE barrier-pinned traced body (the
   families' ``prefill_chunk`` methods delegate here).
+  ``prefill_chunk_body`` is that body, exported standalone so the trace
+  auditor (``repro.analysis.trace``) can verify every compiled chunk
+  program carries its exact primitive sequence.
 """
 
 from __future__ import annotations
@@ -82,6 +85,35 @@ def cache_batch_axes(cache_specs: Params) -> Params:
 # Chunked (resume-from-offset) prefill
 # ---------------------------------------------------------------------------
 
+def prefill_chunk_body(step_fn: Callable, offset: jax.Array,
+                       nvalid: jax.Array) -> Callable:
+    """The ONE barrier-pinned per-position scan body of chunked prefill.
+
+    Exported standalone (rather than living as a closure inside
+    ``prefill_chunk_scan``) so the trace auditor
+    (``repro.analysis.trace``) can trace it in isolation and assert that
+    every compiled chunk-width program contains exactly this primitive
+    sequence — the registration hook of the ``trace-barrier-pinned``
+    rule, mirroring how ``kernels.flash_attention.flash_block_update`` is
+    shared by kernel and oracle. The barriers pin the body boundary so
+    XLA cannot fuse or vectorize it differently per chunk width.
+    """
+
+    def body(carry, inp):
+        cache, last = carry
+        tok, i = inp
+        cache = jax.lax.optimization_barrier(cache)
+        logits, new_cache = step_fn(cache, tok, offset + i)
+        logits, new_cache = jax.lax.optimization_barrier((logits, new_cache))
+        valid = i < nvalid
+        cache = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
+                             new_cache, cache)
+        last = jnp.where(valid, logits[0], last)
+        return (cache, last), None
+
+    return body
+
+
 def prefill_chunk_scan(step_fn: Callable, tokens: jax.Array, cache: Any,
                        offset: jax.Array, nvalid: jax.Array, v_pad: int,
                        ) -> Tuple[jax.Array, Any]:
@@ -111,19 +143,7 @@ def prefill_chunk_scan(step_fn: Callable, tokens: jax.Array, cache: Any,
     touches the cache or the returned logits.
     """
     w = tokens.shape[-1]
-
-    def body(carry, inp):
-        cache, last = carry
-        tok, i = inp
-        cache = jax.lax.optimization_barrier(cache)
-        logits, new_cache = step_fn(cache, tok, offset + i)
-        logits, new_cache = jax.lax.optimization_barrier((logits, new_cache))
-        valid = i < nvalid
-        cache = jax.tree.map(lambda n, o: jnp.where(valid, n, o),
-                             new_cache, cache)
-        last = jnp.where(valid, logits[0], last)
-        return (cache, last), None
-
+    body = prefill_chunk_body(step_fn, offset, nvalid)
     last0 = jnp.zeros((v_pad,), jnp.float32)
     (cache, last), _ = jax.lax.scan(
         body, (cache, last0), (tokens[0], jnp.arange(w)))

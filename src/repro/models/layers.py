@@ -101,10 +101,10 @@ def norm_init(d: int, kind: str, dtype) -> Tuple[Params, Params]:
 def norm_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
-        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)  # contract: allow-no-uncompensated-reduction(rmsnorm variance; d_model fp32 terms feeding an rsqrt)
         y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
     else:
-        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)  # contract: allow-no-uncompensated-reduction(layernorm mean; d_model fp32 terms)
         var = jnp.var(xf, axis=-1, keepdims=True)
         y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
         if kind == "layernorm":

@@ -109,7 +109,7 @@ def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array,
     top1 = expert_idx[..., 0].reshape(-1)
     counts = jnp.zeros((mo.n_experts,), jnp.float32).at[top1].add(1.0)
     frac_tokens = counts / t
-    frac_probs = jnp.mean(probs, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))  # contract: allow-no-uncompensated-reduction(router load statistic; feeds the diagnostic aux loss only)
     aux = mo.n_experts * jnp.sum(frac_tokens * frac_probs)  # contract: allow-no-uncompensated-reduction(aux-loss statistic; n_experts fp32 terms, diagnostic only)
 
     # --- group-local sort-based dispatch ------------------------------------
@@ -179,6 +179,6 @@ def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array,
 
     metrics = {
         "aux_loss": aux,
-        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),  # contract: allow-no-uncompensated-reduction(capacity-drop diagnostic; fraction of a {0,1} mask)
     }
     return y.reshape(b, s, d), metrics

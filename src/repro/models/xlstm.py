@@ -107,7 +107,7 @@ def _mlstm_chunk(state, inp):
     q, k, v, i_raw, f_raw = inp
     scale = q.shape[-1] ** -0.5
     lf = jax.nn.log_sigmoid(f_raw)                    # [B,H,L]
-    b_cum = jnp.cumsum(lf, axis=-1)                   # [B,H,L]
+    b_cum = jnp.cumsum(lf, axis=-1)                   # [B,H,L]  # contract: allow-no-uncompensated-reduction(log-domain forget-gate prefix; chunk-length fp32 terms defining the decay, not a sum estimate)
     total_g = b_cum[..., -1:]
 
     # intra-chunk decay matrix logD[j,t] = i[t] + b[j] - b[t], t <= j

@@ -100,7 +100,14 @@ class Totals:
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9][\w\[\]{},. ()]*?)\s+"
     r"([\w\-]+)\((.*)$")
-_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+# Optimized HLO spells a header "%name (params) -> result {"; the
+# pre-optimization module from ``lowered.compiler_ir("hlo")`` spells it
+# bare: "ENTRY main.9 {". Accept both — the trace auditor parses the
+# pre-optimization module (the last IR that still carries opt-barrier
+# ops; XLA's OptimizationBarrierExpander strips them at the very end of
+# every backend pipeline).
+_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->[^{]*)?\{")
 _TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
 
 
@@ -150,6 +157,18 @@ class HloModule:
             attrs = rest[idx + 1:]
             self.computations[current].append(
                 Op(name, opcode, result, operands, attrs))
+
+    # -------------------------------------------------------- inventories
+    def opcode_counts(self) -> Dict[str, int]:
+        """Opcode -> occurrence count over EVERY computation in the
+        module (entry, loop bodies, fusion bodies alike) — the flat op
+        inventory the trace auditor's barrier-survival and
+        compensation-arithmetic checks run on."""
+        counts: Dict[str, int] = {}
+        for ops in self.computations.values():
+            for op in ops:
+                counts[op.opcode] = counts.get(op.opcode, 0) + 1
+        return counts
 
     # ------------------------------------------------------- trip counts
     def trip_count(self, op: Op) -> int:
@@ -361,3 +380,15 @@ class HloModule:
 
 def analyze_text(hlo_text: str) -> Totals:
     return HloModule(hlo_text).totals()
+
+
+def parse_hlo(hlo_text: str) -> HloModule:
+    """Parse an HLO text module (optimized ``compiled.as_text()`` or the
+    pre-optimization ``lowered.compiler_ir('hlo').as_hlo_text()`` form).
+
+    The reusable entry the trace auditor (``repro.analysis.trace``)
+    builds its HLO-level checks on; kept separate from ``analyze_text``
+    so callers that only want op inventories don't pay for the
+    trip-count-weighted byte/FLOP aggregation.
+    """
+    return HloModule(hlo_text)

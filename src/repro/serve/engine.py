@@ -212,6 +212,52 @@ def _next_chunk(prompt_len: int, offset: int, chunk: Optional[int],
     return _bucket(remaining, chunk), remaining
 
 
+def prefill_program_family(max_len: int, chunk: Optional[int],
+                           needs_begin: bool,
+                           ) -> frozenset:
+    """Every (width, runs_begin) prefill-program key ANY traffic can need.
+
+    A pure sweep of the ``_next_chunk`` schedule over all prompt lengths
+    1..max_len — the exhaustive program set a given engine config can
+    compile, which the trace auditor's ``trace-program-count`` rule
+    bounds against ``prefill_program_bound``. ``chunk=None`` (one-shot
+    admit) yields one width per distinct prompt length, the O(#lengths)
+    behaviour the chunked path exists to avoid.
+    """
+    keys = set()
+    for plen in range(1, max_len + 1):
+        offset = 0
+        first = needs_begin
+        while offset < plen:
+            width, nvalid = _next_chunk(plen, offset, chunk)
+            keys.add((width, first))
+            offset += nvalid
+            first = False
+    return frozenset(keys)
+
+
+def prefill_program_bound(chunk: int, needs_begin: bool) -> int:
+    """The O(#buckets) cap on the compiled prefill program set.
+
+    Widths are the power-of-two tail buckets up to ``chunk`` plus
+    ``chunk`` itself; each width compiles at most once per
+    ``runs_begin`` flavour (twice only for families with a one-time
+    ``prefill_begin``). One-shot engines (``chunk=None``) have no such
+    bound — that IS the contract violation — so this fails fast on None.
+    """
+    if chunk is None:
+        raise ValueError(
+            "one-shot admit (prefill_chunk=None) has no O(#buckets) "
+            "program bound — its program set is O(#distinct prompt "
+            "lengths)")
+    widths = {chunk}
+    b = 1
+    while b <= chunk:
+        widths.add(b)
+        b *= 2
+    return len(widths) * (2 if needs_begin else 1)
+
+
 class _ServePrograms:
     """The engine's compiled callables: one decode ``tick`` plus
     lazily-built prefill chunk programs keyed by (width, runs_begin) —
@@ -573,6 +619,30 @@ class InferenceEngine:
             if h is not None:
                 out[rid] = h
         return out
+
+    # ------------------------------------------------------- audit surface
+    def trace_tick(self) -> Tuple[Any, Tuple]:
+        """(decode-tick callable, representative args) for the trace
+        auditor — the jitted tick itself plus abstract-shaped operands,
+        so ``jax.make_jaxpr(fn)(*args)`` yields the IR XLA compiles.
+        The supported registration surface of ``repro.analysis.targets``
+        (reaching into ``_fns`` from outside would pin internals)."""
+        b = self.ec.max_slots
+        z = functools.partial(jax.ShapeDtypeStruct, (b,))
+        args = (self.params, self.slots.cache, z(jnp.int32), z(jnp.int32),
+                z(jnp.int32), z(jnp.int32), z(jnp.float32), z(jnp.bool_))
+        return self._fns.tick, args
+
+    def trace_prefill(self, width: int, first: bool = False,
+                      ) -> Tuple[Any, Tuple]:
+        """(prefill-chunk program, representative args) for one static
+        chunk width — the trace auditor's view of a bucket program."""
+        s = jax.ShapeDtypeStruct
+        batch = {"tokens": s((1, width), jnp.int32)}
+        args = (self.params, self.slots.cache, s((), jnp.int32), batch,
+                s((), jnp.int32), s((), jnp.int32), s((), jnp.int32),
+                s((), jnp.float32))
+        return self._fns.prefill(width, first), args
 
     @property
     def prefill_programs(self) -> Tuple[Tuple[int, bool], ...]:

@@ -203,6 +203,54 @@ def test_mode_parameter_declaration_flagged():
     assert _rules_fired(report) == ["no-legacy-mode-kwarg"]
 
 
+def test_reduction_rule_catches_mean_cumsum_norm():
+    """mean/cumsum/linalg.norm hide a sum just as surely as jnp.sum."""
+    src = """\
+    import jax.numpy as jnp
+    def stats(x):
+        m = jnp.mean(x)
+        c = jnp.cumsum(x)
+        n = jnp.linalg.norm(x)
+        return m, c, n
+    """
+    report = _lint(src, "models/x.py", "no-uncompensated-reduction")
+    assert sorted(v.line for v in report.violations) == [3, 4, 5]
+
+
+def test_reduction_rule_silent_on_engine_mean():
+    src = """\
+    from repro.kernels import ops
+    def stats(x):
+        return ops.asum(x) / x.size
+    """
+    report = _lint(src, "models/x.py", "no-uncompensated-reduction")
+    assert report.violations == []
+
+
+def test_host_sync_rule_catches_asarray_and_block_until_ready():
+    src = """\
+    import numpy as np
+    def decode_step(logits, tok):
+        probs = np.asarray(logits)
+        logits.block_until_ready()
+        return probs, tok
+    """
+    report = _lint(src, "serve/x.py", "no-host-sync-in-trace")
+    assert {3, 4} <= {v.line for v in report.violations}
+
+
+def test_host_sync_asarray_ok_outside_trace_bodies():
+    """np.asarray is only a trace hazard inside decode/prefill bodies —
+    the engine's host-side emit points use it legitimately."""
+    src = """\
+    import numpy as np
+    def emit_results(logits):
+        return np.asarray(logits)
+    """
+    report = _lint(src, "serve/x.py", "no-host-sync-in-trace")
+    assert report.violations == []
+
+
 # ---------------------------------------------------------------------------
 # pragma parsing
 # ---------------------------------------------------------------------------
@@ -309,7 +357,9 @@ def test_json_report_schema():
     """)
     payload = json.loads(render_json(lint_source(src, "models/x.py")))
     assert set(payload) == {"files", "violations", "exemptions",
-                            "pragma_errors", "rules"}
+                            "pragma_errors", "rules", "budget"}
+    # no --budget requested: the verdict is present and vacuously ok
+    assert payload["budget"] == {"limit": None, "exemptions": 1, "ok": True}
     assert payload["files"] == 1
     (v,) = payload["violations"]
     assert set(v) == {"rule", "path", "line", "col", "message", "fix_hint"}
@@ -359,6 +409,41 @@ def test_cli_empty_reason_fails_only_strict(tmp_path, capsys):
     assert cli_main(["--strict", str(f)]) == 1
     out = capsys.readouterr().out
     assert "empty reason" in out
+
+
+def test_cli_reports_every_bad_path_in_one_run(tmp_path, capsys):
+    """Path validation is up-front and exhaustive: one run names every
+    missing/unreadable path (and any unknown rule) instead of failing on
+    the first and hiding the rest."""
+    ok = tmp_path / "ok.py"
+    ok.write_text("x = 1\n")
+    rc = cli_main(["--rule", "no-such-rule", str(tmp_path / "missing_a.py"),
+                   str(ok), str(tmp_path / "missing_b.py")])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "missing_a.py" in err
+    assert "missing_b.py" in err
+    assert "no-such-rule" in err
+
+
+def test_cli_budget_ratchet(tmp_path, capsys):
+    f = tmp_path / "repro" / "models" / "x.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "def f(a):\n"
+        "    return jnp.sum(a)"
+        "  # contract: allow-no-uncompensated-reduction(fixture)\n")
+    # one exemption: within budget 1, over budget 0
+    assert cli_main(["--strict", "--budget", "1", str(f)]) == 0
+    capsys.readouterr()
+    assert cli_main(["--strict", "--budget", "0", str(f)]) == 1
+    out = capsys.readouterr().out
+    assert "exceed the budget" in out
+    # the JSON artifact carries the verdict
+    assert cli_main(["--json", "--budget", "0", str(f)]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["budget"] == {"limit": 0, "exemptions": 1, "ok": False}
 
 
 def test_cli_module_invocation():
