@@ -16,6 +16,14 @@ families track that:
   the long prompt); chunked prefill under a 1-chunk budget bounds the
   gap by one chunk of prefill work. ``derived`` carries the long
   request's time-to-first-token for the same trace.
+* ``serve_prefill_<mode>_c<width>_<scheme>`` — prefill tokens/s per
+  chunk body (``scan`` = the per-position oracle, ``flash`` = one fused
+  pass per chunk through the engine's chunk flash kernel), per chunk
+  width, per registered scheme. The scan body pays one sequential
+  decode step per token regardless of width; the flash body pays one
+  fused program per chunk — so its tokens/s grows with width and the
+  flash-vs-scan ratio (in ``derived``) is the tentpole's headline.
+  Kahan-vs-naive inside a mode isolates the compensation overhead.
 
 Interpret mode on CPU validates the orderings (occupancy amortizes the
 fixed per-tick cost; the stall ratio tracks prompt_len/chunk), not TPU
@@ -40,6 +48,34 @@ def _tiny_cfg():
                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
                       vocab_size=256, param_dtype="float32",
                       compute_dtype="float32", loss_chunk=64)
+
+
+def _prefill_cfg():
+    """``kahan_attention=True`` twin of ``_tiny_cfg``: the parallel
+    chunk body routes through the chunk flash kernel. Scan mode runs on
+    the SAME config, so the mode rows isolate the body swap."""
+    return ArchConfig(name="bench-serve-flash", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, kahan_attention=True,
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64)
+
+
+def _prefill_rate(cfg, model, params, ec, prompt_len):
+    """Prefill tokens/s, best-of-3 (1 new token -> the run is ~all
+    prefill; programs are warmed on the shared model cache first)."""
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size,
+                                        (prompt_len,)).astype(np.int32),
+                    sampling=SamplingParams(max_new_tokens=1))]
+    InferenceEngine(cfg, ec, model=model, params=params).run(reqs)
+    best = float("inf")
+    for _ in range(3):
+        eng = InferenceEngine(cfg, ec, model=model, params=params)
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        best = min(best, time.perf_counter() - t0)
+    return prompt_len / best
 
 
 def _run_once(cfg, model, params, ec, occupancy, prompt_len, new_tokens):
@@ -91,7 +127,7 @@ def _interleave_stall(cfg, model, params, ec, long_len, short_new):
 
 
 def main(max_slots: int = 4, prompt_len: int = 16, new_tokens: int = 16,
-         ) -> None:
+         prefill_len: int = 256, prefill_widths=(16, 64)) -> None:
     print(f"# serving engine: max_slots={max_slots} prompt={prompt_len} "
           f"new={new_tokens} (tokens/s vs occupancy per scheme; the tick "
           "cost is fixed per step, so tok/s should grow with occupancy)")
@@ -129,6 +165,32 @@ def main(max_slots: int = 4, prompt_len: int = 16, new_tokens: int = 16,
         emit(f"serve_stall_{tag}", gap * 1e6,
              f"long-TTFT={ttft * 1e3:.1f}ms")
 
+    # parallel (flash) prefill: tokens/s per scheme x chunk body x width
+    fcfg = _prefill_cfg()
+    fmodel = build_model(fcfg)
+    fparams, _ = fmodel.init(jax.random.key(1))
+    print(f"# parallel prefill: prompt={prefill_len}, chunk widths "
+          f"{tuple(prefill_widths)}; scan = per-position oracle body, "
+          f"flash = one fused pass per chunk (tokens/s should scale with "
+          f"width under flash only)")
+    rates = {}
+    for name in schemes.names():
+        for width in prefill_widths:
+            for mode in ("scan", "flash"):
+                ec = EngineConfig(max_slots=2, max_len=prefill_len + 2,
+                                  policy=Policy(scheme=name, unroll=2),
+                                  prefill_chunk=width, prefill_mode=mode)
+                r = _prefill_rate(fcfg, fmodel, fparams, ec, prefill_len)
+                rates[(name, mode, width)] = r
+                extra = ""
+                if mode == "flash":
+                    extra += f" x{r / rates[(name, 'scan', width)]:.2f}vs-scan"
+                naive = rates.get(("naive", mode, width))
+                if naive and name != "naive":
+                    extra += f" x{r / naive:.2f}vs-naive"
+                emit(f"serve_prefill_{mode}_c{width}_{name}", 1e6 / r,
+                     f"{r:.0f}tok/s{extra}")
+
 
 if __name__ == "__main__":
     import argparse
@@ -138,6 +200,7 @@ if __name__ == "__main__":
                     help="tiny shapes (matches the run.py smoke cell)")
     args = ap.parse_args()
     if args.smoke:
-        main(max_slots=2, prompt_len=8, new_tokens=4)
+        main(max_slots=2, prompt_len=8, new_tokens=4, prefill_len=64,
+             prefill_widths=(16, 64))
     else:
         main()

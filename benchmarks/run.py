@@ -66,7 +66,8 @@ def _benchmarks():
         ("bench_matmul_batched", bench_matmul_batched, {},
          {"batch": 2, "m": 32, "k": 512, "n": 128}),
         ("bench_serve", bench_serve, {},
-         {"max_slots": 2, "prompt_len": 8, "new_tokens": 4}),
+         {"max_slots": 2, "prompt_len": 8, "new_tokens": 4,
+          "prefill_len": 64, "prefill_widths": (16, 64)}),
         ("bench_scaling", bench_scaling, {}, {}),
         ("bench_architectures", bench_architectures, {}, {}),
         ("bench_flash_attention", bench_flash_attention, {}, {}),

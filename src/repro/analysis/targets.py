@@ -176,6 +176,22 @@ def tiny_arch():
 
 
 @functools.lru_cache(maxsize=None)
+def tiny_flash_arch():
+    """Flash-capable twin of :func:`tiny_arch`: ``kahan_attention=True``
+    routes the parallel chunk body through the engine's chunk flash
+    kernel, so the flash-prefill targets actually carry the Pallas
+    grid (the default tiny config would silently audit the dense
+    fallback core instead)."""
+    from repro.configs.base import ArchConfig
+
+    return ArchConfig(name="tiny-flash", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=128, kahan_attention=True,
+                      param_dtype="float32", compute_dtype="float32",
+                      loss_chunk=64)
+
+
+@functools.lru_cache(maxsize=None)
 def _tiny_serve():
     """ONE tiny engine shared by every serve target (scan slot loop)."""
     from repro.serve import EngineConfig, InferenceEngine
@@ -184,6 +200,17 @@ def _tiny_serve():
         tiny_arch(),
         EngineConfig(max_slots=_SLOTS, max_len=_MAX_LEN,
                      prefill_chunk=_CHUNK))
+
+
+@functools.lru_cache(maxsize=None)
+def _tiny_serve_flash():
+    """The flash-mode sibling engine (parallel multi-token chunk body)."""
+    from repro.serve import EngineConfig, InferenceEngine
+
+    return InferenceEngine(
+        tiny_flash_arch(),
+        EngineConfig(max_slots=_SLOTS, max_len=_MAX_LEN,
+                     prefill_chunk=_CHUNK, prefill_mode="flash"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -247,6 +274,26 @@ def _flash_build() -> TraceArtifact:
 
     return TraceArtifact(jaxpr=kernel, oracle_jaxpr=oracle, body_jaxpr=body,
                          compute_dtype=eng.compute_dtype, hlo=hlo)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_chunk_build() -> TraceArtifact:
+    from repro.kernels.engine import CompensatedReduction
+    from repro.kernels.flash_attention import flash_block_probe
+
+    eng = CompensatedReduction(scheme="kahan")
+    q = _sds(_FLASH)
+    off = _sds((), jnp.int32)
+    kernel = jax.make_jaxpr(
+        lambda q, k, v, off: eng.flash_chunk_attention(
+            q, k, v, q_off=off, block_q=_FLASH_BLOCK,
+            block_k=_FLASH_BLOCK))(q, q, q, off)
+    body_fn, body_args = flash_block_probe(
+        scheme="kahan", block_q=_FLASH_BLOCK, block_k=_FLASH_BLOCK,
+        dh=_FLASH[2], kv_len=_FLASH[1], with_offset=True)
+    body = jax.make_jaxpr(body_fn)(*body_args)
+    return TraceArtifact(jaxpr=kernel, body_jaxpr=body,
+                         compute_dtype=eng.compute_dtype)
 
 
 @functools.lru_cache(maxsize=None)
@@ -339,6 +386,63 @@ def _prefill_family_build() -> TraceArtifact:
         program_bound=prefill_program_bound(_CHUNK, needs_begin=False))
 
 
+@functools.lru_cache(maxsize=None)
+def _prefill_flash_traces() -> Dict[int, Any]:
+    """width -> jaxpr of the flash-mode bucket program."""
+    engine = _tiny_serve_flash()
+    assert engine.prefill_body == "flash", (
+        "the audit's flash engine resolved to the scan body — "
+        "tiny_flash_arch lost its parallel-prefill eligibility")
+    out = {}
+    for width in sorted(prefill_widths(), reverse=True):
+        fn, args = engine.trace_prefill(width, first=False)
+        out[width] = jax.make_jaxpr(fn)(*args)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_flash_body_reference():
+    """The chunk flash kernel's block body WITH the traced-offset
+    operand, traced standalone at the audit engine's resolved block
+    geometry (block_q = the 8-padded chunk width, block_k / kv_len from
+    the max_len-16 cache) — trace-barrier-pinned asserts every
+    multi-token flash bucket program embeds this sequence verbatim."""
+    from repro.kernels.flash_attention import flash_block_probe
+
+    arch = tiny_flash_arch()
+    body_fn, body_args = flash_block_probe(
+        scheme="kahan", block_q=8, block_k=128, dh=arch.head_dim,
+        kv_len=_MAX_LEN, with_offset=True)
+    return jax.make_jaxpr(body_fn)(*body_args)
+
+
+def _prefill_flash_build(width: int) -> Callable[[], TraceArtifact]:
+    def build() -> TraceArtifact:
+        # width-1 buckets route through the decode branch (a 1-wide
+        # chunk IS a decode step) — no flash grid to pin there
+        body = _prefill_flash_body_reference() if width > 1 else None
+        return TraceArtifact(jaxpr=_prefill_flash_traces()[width],
+                             body_jaxpr=body)
+
+    return build
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_flash_family_build() -> TraceArtifact:
+    """Flash mode must keep the SAME O(#buckets) program family: the
+    body swap changes what runs inside a bucket program, never how many
+    programs the engine compiles."""
+    from repro.serve.engine import (
+        prefill_program_bound,
+        prefill_program_family,
+    )
+
+    return TraceArtifact(
+        program_keys=prefill_program_family(_MAX_LEN, _CHUNK,
+                                            needs_begin=False),
+        program_bound=prefill_program_bound(_CHUNK, needs_begin=False))
+
+
 # ---------------------------------------------------------------------------
 # Built-in targets
 # ---------------------------------------------------------------------------
@@ -370,6 +474,10 @@ for _t in (
     Target(id="kernels.flash_attention", build=_flash_build,
            tags=("kernel", "shared-block", "hlo"),
            doc="flash kernel vs jnp oracle, sharing flash_block_update"),
+    Target(id="kernels.flash_chunk_attention", build=_flash_chunk_build,
+           tags=("kernel", "shared-block"),
+           doc="chunked-prefill flash grid (queries at a traced offset) "
+               "embedding the offset variant of flash_block_update"),
     Target(id="optim.engine_sq_norm", build=_sq_norm_build,
            tags=("kernel", "sharded"),
            doc="optimizer global-norm fold through the engine's merge "
@@ -398,6 +506,10 @@ for _t in (
            tags=("program-count",),
            doc="the prefill (width, runs_begin) program family vs its "
                "O(#buckets) bound"),
+    Target(id="serve.prefill_flash_buckets", build=_prefill_flash_family_build,
+           tags=("program-count",),
+           doc="flash-mode prefill program family — the parallel body "
+               "keeps the same O(#buckets) bound"),
 ):
     register(_t)
 
@@ -407,3 +519,11 @@ for _w in prefill_widths():
         tags=("serve", "prefill", "shared-block"),
         doc=f"prefill bucket program at chunk width {_w} (must embed the "
             f"shared per-position body verbatim)"))
+    register(Target(
+        id=f"serve.prefill_flash.w{_w}", build=_prefill_flash_build(_w),
+        tags=(("serve", "prefill", "shared-block") if _w > 1
+              else ("serve", "prefill")),
+        doc=(f"flash-mode prefill program at chunk width {_w} (must embed "
+             f"the offset flash block body verbatim)" if _w > 1 else
+             "flash-mode width-1 bucket (routes through the decode "
+             "branch — no flash grid)")))

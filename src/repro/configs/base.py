@@ -121,8 +121,11 @@ class ArchConfig:
     # scheme / blocks / accumulate dtype.
     kahan_matmul: bool = False    # dense projections via ops.matmul
     # parallel (multi-token) prefill attention via the engine flash
-    # kernel — model.prefill callers only; the serving engine's chunked
-    # prefill is per-position and does not take this path (ROADMAP)
+    # kernel: model.prefill, and — under EngineConfig.prefill_mode=
+    # "flash" — the serving engine's parallel chunk body, which runs
+    # each prefill chunk as ONE fused pass through the chunk flash
+    # kernel at a traced cache offset (families whose recurrence forces
+    # per-position stepping fall back to the scan body)
     kahan_attention: bool = False
     # dtypes
     param_dtype: str = "bfloat16"

@@ -477,6 +477,69 @@ class CompensatedReduction:
             q_groups=q_groups, compute_dtype=self.compute_dtype)
         return Accumulator(l_s, l_c), Accumulator(o_s, o_c), sq
 
+    def flash_chunk_attention(self, q: jax.Array, k: jax.Array,
+                              v: jax.Array, *, q_off: jax.Array,
+                              block_q: int = 256, block_k: int = 256,
+                              q_groups: int = 1) -> jax.Array:
+        """Chunked-prefill fused attention: a chunk of queries at TRACED
+        absolute offset ``q_off`` attends the full KV cache.
+
+        q: [BH, W, dh] (the chunk — query row i lives at sequence
+        position ``q_off + i``); k/v: [BH // q_groups, Skv, dh] — the
+        whole per-slot cache with the chunk's K/V already written at
+        ``q_off``. Masking is always causal on absolute positions (which
+        is also what excludes unwritten cache rows); ``kv_len`` masks
+        only engine padding, so ONE compiled program serves every chunk
+        of width W. Same padding / promotion / finalization policy — and
+        the same shared block body — as ``flash_attention``, so output
+        rows whose absolute positions coincide with a full-sequence
+        call's are bitwise equal. Returns [BH, W, dh] compute-dtype.
+        """
+        l_acc, o_acc, w = self.flash_chunk_attention_accumulators(
+            q, k, v, q_off=q_off, block_q=block_q, block_k=block_k,
+            q_groups=q_groups)
+        l_tot = self.scheme.finalize(l_acc.s, l_acc.c)
+        o_tot = self.scheme.finalize(o_acc.s, o_acc.c)
+        out = o_tot / jnp.maximum(l_tot, 1e-30)
+        return out[:, :w, :]
+
+    def flash_chunk_attention_accumulators(self, q: jax.Array, k: jax.Array,
+                                           v: jax.Array, *, q_off: jax.Array,
+                                           block_q: int = 256,
+                                           block_k: int = 256,
+                                           q_groups: int = 1,
+                                           ) -> Tuple[Accumulator,
+                                                      Accumulator, int]:
+        """Raw (l, acc) pairs from the chunked-prefill flash grid.
+
+        Padded query rows (W -> block multiple) run at absolute
+        positions past the chunk and produce garbage the caller slices
+        off — exactly the engine's Sq-padding policy on the full grid.
+        """
+        bh, w, dh = q.shape
+        if bh != k.shape[0] * q_groups:
+            raise ValueError(
+                f"flash_chunk_attention: q has {bh} head-rows but k/v "
+                f"carry {k.shape[0]} with q_groups={q_groups} "
+                f"(expected BH == BH_kv * q_groups)")
+        skv = k.shape[1]
+        block_q = min(block_q, _round_up(w, 8))
+        block_k = min(block_k, _round_up(skv, 128))
+        q = q.astype(self.compute_dtype)
+        k = k.astype(self.compute_dtype)
+        v = v.astype(self.compute_dtype)
+        pq, pk = (-w) % block_q, (-skv) % block_k
+        if pq:
+            q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+        if pk:
+            k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+        l_s, l_c, o_s, o_c = _fa.flash_chunk_accumulators(
+            q, k, v, q_off, block_q=block_q, block_k=block_k,
+            scheme=self.scheme, kv_len=skv, interpret=self._interpret(),
+            q_groups=q_groups, compute_dtype=self.compute_dtype)
+        return Accumulator(l_s, l_c), Accumulator(o_s, o_c), w
+
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m

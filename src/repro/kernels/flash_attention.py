@@ -76,7 +76,8 @@ def rowsum_tree(p: jax.Array) -> jax.Array:
 def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
                        l_s, l_c, a_s, a_c, *, qb, kb, step, block_q: int,
                        block_k: int, kv_len: int, causal: bool,
-                       scale: float, compute_dtype=jnp.float32):
+                       scale: float, compute_dtype=jnp.float32,
+                       q_off=None):
     """ONE k-block fold of the online-softmax state — the shared body.
 
     Traced by BOTH the Pallas kernel (block refs) and the jnp oracle
@@ -93,6 +94,16 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
     Inputs are one block each: q [bq, dh]; k/v [bk, dh]; running stats
     m_old/l/l_c [bq, 1], a/a_c [bq, dh]. Returns the updated
     (m, l_s, l_c, a_s, a_c).
+
+    ``q_off`` (optional, traced i32 scalar): absolute position of query
+    row 0 of the WHOLE q operand — the chunked-prefill entry point
+    (``flash_chunk_accumulators``) attends a chunk of queries that live
+    at positions ``q_off + i`` of the sequence against the full KV
+    cache. Shifting ``q_pos`` is integer arithmetic (exact), so when a
+    chunk's absolute positions coincide with a full-sequence call's,
+    the per-block float op sequence — and therefore the output bits —
+    is identical. ``None`` (the default) keeps the traced program of
+    the non-offset paths byte-for-byte unchanged.
     """
     barrier = jax.lax.optimization_barrier
     s = barrier(jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),  # contract: allow-no-uncompensated-reduction(flash scores; compute_dtype over head_dim terms, block-local)
@@ -100,6 +111,8 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
     s = barrier(s * scale)
     q_pos = qb * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 0)
+    if q_off is not None:
+        q_pos = q_off + q_pos
     k_pos = kb * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
     valid = k_pos < kv_len                       # engine-padded keys
@@ -126,7 +139,7 @@ def flash_block_update(scheme: CompensationScheme, q, k, v, m_old,
 
 def flash_block_probe(scheme=None, *, block_q: int = 8, block_k: int = 8,
                       dh: int = 8, kv_len: int = 8, causal: bool = True,
-                      compute_dtype=None):
+                      compute_dtype=None, with_offset: bool = False):
     """(callable, abstract args) for tracing ONE block body standalone.
 
     The trace auditor (``repro.analysis.trace``) traces this and asserts
@@ -136,6 +149,12 @@ def flash_block_probe(scheme=None, *, block_q: int = 8, block_k: int = 8,
     ``flash_block_update``. Abstract ``ShapeDtypeStruct`` args (never
     weak-typed literals) so the standalone trace is equation-for-equation
     the one the kernel and oracle embed.
+
+    ``with_offset``: probe the chunked-prefill variant of the body —
+    one extra traced i32 scalar (``q_off``) appended to the args, fed to
+    ``flash_block_update(..., q_off=...)`` exactly as the chunk kernel
+    does, so the flash-prefill trace targets can pin THAT primitive
+    sequence.
     """
     from repro.kernels import schemes as _schemes
 
@@ -148,6 +167,17 @@ def flash_block_probe(scheme=None, *, block_q: int = 8, block_k: int = 8,
             s((block_q, 1), cdt), s((block_q, 1), cdt),
             s((block_q, dh), cdt), s((block_q, dh), cdt),
             s((), i32), s((), i32), s((), i32))
+    if with_offset:
+        args = args + (s((), i32),)
+
+        def run(q, k, v, m_old, l_s, l_c, a_s, a_c, qb, kb, step, q_off):
+            return flash_block_update(
+                sch, q, k, v, m_old, l_s, l_c, a_s, a_c, qb=qb, kb=kb,
+                step=step, block_q=block_q, block_k=block_k, kv_len=kv_len,
+                causal=causal, scale=dh ** -0.5, compute_dtype=cdt,
+                q_off=q_off)
+
+        return run, args
 
     def run(q, k, v, m_old, l_s, l_c, a_s, a_c, qb, kb, step):
         return flash_block_update(
@@ -262,6 +292,123 @@ def flash_accumulators(q, k, v, *, block_q, block_k,
     )(q, k, v)
 
 
+def _flash_chunk_kernel(off_ref, q_ref, k_ref, v_ref, ls_out, lc_out,
+                        as_out, ac_out, m_scr, l_scr, lc_scr, acc_scr,
+                        accc_scr, *, scheme: CompensationScheme,
+                        block_q: int, block_k: int, k_steps: int,
+                        kv_len: int, scale: float,
+                        compute_dtype=jnp.float32):
+    """Chunked-prefill grid body: ``_flash_kernel`` plus a traced query
+    offset read from SMEM. Queries live at absolute positions
+    ``q_off + i``; masking is always causal on those absolute positions,
+    which is also what excludes cache rows not yet written (a causal
+    query at position p never reads keys past p)."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        lc_scr[...] = jnp.zeros_like(lc_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        accc_scr[...] = jnp.zeros_like(accc_scr)
+
+    q = q_ref[0].astype(compute_dtype)          # [bq, dh]
+    k = k_ref[0].astype(compute_dtype)          # [bk, dh]
+    v = v_ref[0].astype(compute_dtype)
+
+    m_new, l_s, l_c, a_s, a_c = flash_block_update(
+        scheme, q, k, v, m_scr[...], l_scr[...], lc_scr[...],
+        acc_scr[...], accc_scr[...], qb=pl.program_id(1), kb=kb, step=kb,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, causal=True,
+        scale=scale, compute_dtype=compute_dtype, q_off=off_ref[0, 0])
+    l_scr[...] = l_s
+    lc_scr[...] = l_c
+    acc_scr[...] = a_s
+    accc_scr[...] = a_c
+    m_scr[...] = m_new
+
+    @pl.when(kb == k_steps - 1)
+    def _emit():
+        ls_out[0] = l_scr[...]
+        lc_out[0] = lc_scr[...]
+        as_out[0] = acc_scr[...]
+        ac_out[0] = accc_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "scheme", "kv_len", "interpret",
+                     "q_groups", "compute_dtype"))
+def flash_chunk_accumulators(q, k, v, q_off, *, block_q, block_k,
+                             scheme: CompensationScheme, kv_len,
+                             interpret, q_groups: int = 1,
+                             compute_dtype=jnp.float32,
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                        jax.Array]:
+    """Chunked-prefill flash grid: a chunk of queries at a TRACED offset
+    attends the full KV cache. Returns raw (l_s, l_c, acc_s, acc_c).
+
+    ``q``: [BH, W, dh] — the chunk's queries, at absolute sequence
+    positions ``q_off + i``. ``k``/``v``: [BH // q_groups, Skv, dh] —
+    the slot's whole cache (the chunk's own K/V already written at
+    ``q_off``), padded to block multiples by the engine. ``q_off`` is a
+    traced i32 scalar fed through SMEM, so one compiled program serves
+    every chunk of the same width — the serving engine's O(#buckets)
+    program-set bound survives the flash path. Masking is always causal
+    on absolute positions (which subsumes excluding cache rows past the
+    chunk: a causal query never reads keys beyond itself); ``kv_len``
+    is static and masks only engine padding. Same block body
+    (``flash_block_update``) as the full grid, so rows whose absolute
+    positions coincide with a full-sequence call's are bitwise equal.
+    """
+    bh, w, dh = q.shape
+    _, skv, _ = k.shape
+    assert w % block_q == 0 and skv % block_k == 0
+    assert bh == k.shape[0] * q_groups, (q.shape, k.shape, q_groups)
+    grid = (bh, w // block_q, skv // block_k)
+    scale = dh ** -0.5
+    off = jnp.asarray(q_off, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _flash_chunk_kernel, scheme=scheme, block_q=block_q,
+        block_k=block_k, k_steps=grid[2], kv_len=kv_len, scale=scale,
+        compute_dtype=compute_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j: (b // q_groups, j, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda b, i, j: (b // q_groups, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, w, 1), compute_dtype),
+            jax.ShapeDtypeStruct((bh, w, 1), compute_dtype),
+            jax.ShapeDtypeStruct((bh, w, dh), compute_dtype),
+            jax.ShapeDtypeStruct((bh, w, dh), compute_dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), compute_dtype),    # m
+            pltpu.VMEM((block_q, 1), compute_dtype),    # l
+            pltpu.VMEM((block_q, 1), compute_dtype),    # l comp
+            pltpu.VMEM((block_q, dh), compute_dtype),   # acc
+            pltpu.VMEM((block_q, dh), compute_dtype),   # acc comp
+        ],
+        interpret=interpret,
+    )(off, q, k, v)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 256, block_k: int = 256,
                     scheme: Union[str, CompensationScheme, None] = None,
@@ -284,3 +431,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     eng = CompensatedReduction(scheme=scheme, interpret=interpret)
     return eng.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
                                causal=causal, q_groups=q_groups)
+
+
+def flash_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          q_off: jax.Array, block_q: int = 256,
+                          block_k: int = 256,
+                          scheme: Union[str, CompensationScheme, None] = None,
+                          interpret: Optional[bool] = None,
+                          q_groups: int = 1) -> jax.Array:
+    """Chunked-prefill veneer: q [BH, W, dh] at traced absolute offset
+    ``q_off`` attends the full cached k/v [BH // q_groups, Skv, dh].
+    Always causal on absolute positions. Engine owns padding / promotion
+    / finalization exactly as in ``flash_attention``; see
+    ``CompensatedReduction.flash_chunk_attention``."""
+    from repro.kernels.engine import CompensatedReduction
+
+    eng = CompensatedReduction(scheme=scheme, interpret=interpret)
+    return eng.flash_chunk_attention(q, k, v, q_off=q_off, block_q=block_q,
+                                     block_k=block_k, q_groups=q_groups)

@@ -112,6 +112,13 @@ def main():
                          "admitting requests (bounds how long a long "
                          "prompt can stall running requests' decode); "
                          "0 -> unbounded (admits finish in their step)")
+    ap.add_argument("--prefill-mode", default="scan",
+                    help="chunk body: 'scan' (per-position oracle) or "
+                         "'flash' (parallel multi-token chunk through the "
+                         "engine's chunk flash kernel — prefill tokens/s "
+                         "scales with chunk width; families whose "
+                         "recurrence forces per-position stepping fall "
+                         "back to scan). Validated at the parse boundary")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="prompt-content RNG seed")
@@ -129,6 +136,14 @@ def main():
                          "(float32 | bfloat16 | float64 — f64 needs x64; "
                          "unsupported dtypes fail fast with the menu)")
     args = ap.parse_args()
+
+    if args.prefill_mode not in ("scan", "flash"):
+        # parse-boundary validation, same convention as the trace cells:
+        # the bad flag names itself here, not inside EngineConfig or a
+        # jit trace
+        raise ValueError(
+            f"--prefill-mode must be 'scan' or 'flash', "
+            f"got {args.prefill_mode!r}")
 
     if args.trace:
         cells = parse_trace(args.trace, args.temperature)
@@ -164,16 +179,25 @@ def main():
         cfg, EngineConfig(max_slots=args.max_slots, max_len=max_len,
                           track_stats=args.stats, policy=policy,
                           prefill_chunk=args.prefill_chunk or None,
-                          prefill_budget=args.prefill_budget or None))
+                          prefill_budget=args.prefill_budget or None,
+                          prefill_mode=args.prefill_mode))
+    if engine.prefill_body != args.prefill_mode:
+        print(f"# prefill-mode {args.prefill_mode!r} requested but family "
+              f"{cfg.family!r} runs the {engine.prefill_body!r} body "
+              f"(per-position fallback — recurrent state or unsupported "
+              f"config)")
     for t, events in engine.stream(requests, arrivals):
+        chunks = " ".join(f"r{rid}+{w}/{body}"
+                          for rid, w, body in engine.last_chunks)
         emitted = ", ".join(
             f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
             for e in events)
         print(f"# step {t:3d} occupancy={engine.scheduler.occupancy} "
               f"prefilling={len(engine.scheduler.prefilling)} "
-              f"queued={engine.scheduler.queued}  {emitted}")
+              f"queued={engine.scheduler.queued}"
+              f"{'  chunks: ' + chunks if chunks else ''}  {emitted}")
     print(f"# compiled prefill programs (width, runs_setup): "
-          f"{list(engine.prefill_programs)}")
+          f"{list(engine.prefill_programs)} body={engine.prefill_body}")
 
     for rid, h in sorted(engine.handles.items()):
         arrival, plen, new, temp = cells[rid]

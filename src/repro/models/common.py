@@ -16,6 +16,11 @@
   ``prefill_chunk_body`` is that body, exported standalone so the trace
   auditor (``repro.analysis.trace``) can verify every compiled chunk
   program carries its exact primitive sequence.
+* ``parallel_chunk_logits`` — the parallel (flash) chunk body's
+  last-valid-position logits: families that can run a whole chunk in
+  ONE forward pass (``prefill_chunk_parallel``, engine
+  ``prefill_mode="flash"``) share it to sample the request's first
+  token; the per-position scan above stays the oracle.
 """
 
 from __future__ import annotations
@@ -148,6 +153,25 @@ def prefill_chunk_scan(step_fn: Callable, tokens: jax.Array, cache: Any,
     (cache, last), _ = jax.lax.scan(
         body, (cache, last0), (tokens[0], jnp.arange(w)))
     return last[None], cache
+
+
+def parallel_chunk_logits(x: jax.Array, params: Params, cfg: ArchConfig,
+                          nvalid: jax.Array) -> jax.Array:
+    """Last-VALID-position logits of a parallel prefill chunk.
+
+    ``x``: [1, w, D] — the chunk's final hidden states from ONE
+    multi-token forward pass (``prefill_chunk_parallel``); ``nvalid`` is
+    the traced count of real (non-bucket-padding) positions, >= 1 for
+    every scheduled chunk. The serving engine samples a request's first
+    token from these logits when the chunk completes the prompt, so this
+    is the parallel body's analogue of ``prefill_chunk_scan``'s
+    last-valid select — implemented as a dynamic slice of the HIDDEN
+    state (one [1, 1, D] row) so only one position pays the vocab
+    projection.
+    """
+    idx = jnp.clip(nvalid - 1, 0, x.shape[1] - 1)
+    x_last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+    return decode_logits(x_last, params, cfg)
 
 
 def decode_prefill_chunk(model, params: Params, batch: Dict[str, jax.Array],

@@ -24,6 +24,7 @@ from repro.models.common import (
     decode_prefill_chunk,
     init_embed_and_head,
     lm_head_weight,
+    parallel_chunk_logits,
     stack_init,
 )
 from repro.models.layers import (
@@ -48,6 +49,11 @@ class EncDecLM:
                              _dtype(cfg.compute_dtype),
                              kahan_matmul=cfg.kahan_matmul,
                              kahan_attention=cfg.kahan_attention)
+        # The decoder is plain GQA self-attention + cached cross-attention
+        # — both take multi-token chunks, so the parallel prefill body
+        # always applies (``prefill_begin`` still runs once, inside the
+        # first chunk program).
+        self.parallel_prefill_ok = True
 
     # ------------------------------------------------------------------ init
     def _enc_block_init(self):
@@ -112,7 +118,7 @@ class EncDecLM:
 
     # --------------------------------------------------------------- decoder
     def _dec_run(self, params, x, enc_out, *, q_pos, caches=None,
-                 cache_index=None, remat=False):
+                 cache_index=None, remat=False, chunk_valid=None):
         cfg = self.cfg
         cd = _dtype(cfg.compute_dtype)
         f_pos = None if enc_out is None else jnp.arange(enc_out.shape[1])
@@ -121,7 +127,8 @@ class EncDecLM:
             kv_c = c_l["kv"] if c_l is not None else None
             a_in = norm_apply(p_l["ln1"], x, cfg.norm)
             a, new_kv = attention(p_l["attn"], self.st, a_in, q_pos=q_pos,
-                                  cache=kv_c, cache_index=cache_index)
+                                  cache=kv_c, cache_index=cache_index,
+                                  chunk_valid=chunk_valid)
             x = x + a
             xa_in = norm_apply(p_l["ln_x"], x, cfg.norm)
             if c_l is not None and "xk" in c_l:      # serving: cached cross
@@ -238,3 +245,21 @@ class EncDecLM:
         ``decode_step``)."""
         return decode_prefill_chunk(self, params, batch, cache, offset,
                                     nvalid)
+
+    def prefill_chunk_parallel(self, params, batch, cache, offset, nvalid):
+        """Multi-token chunk prefill over the decoder: ONE forward pass
+        per chunk (self-attention through the engine chunk flash kernel
+        at the traced offset; cross-attention reads the
+        ``prefill_begin``-cached K/V, which already serves any query
+        width). Same contract as ``prefill_chunk`` — the per-position
+        scan stays the oracle."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        tokens = batch["tokens"]                      # [1, w]
+        pos = offset + jnp.arange(tokens.shape[-1])
+        x = embed_lookup(params["embed"], tokens, cd)
+        x, new_caches = self._dec_run(params, x, None, q_pos=pos,
+                                      caches=cache, cache_index=offset,
+                                      chunk_valid=nvalid)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return parallel_chunk_logits(x, params, cfg, nvalid), new_caches

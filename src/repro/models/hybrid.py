@@ -224,6 +224,11 @@ class HymbaLM:
     def prefill_chunk(self, params, batch, cache, offset, nvalid):
         """Resume-from-offset prefill over the hybrid cache: ring-buffer
         KV writes wrap and the SSM recurrent state advances exactly as in
-        decode (the per-position body IS ``decode_step``)."""
+        decode (the per-position body IS ``decode_step``).
+
+        No ``prefill_chunk_parallel`` here: the SSM recurrence is
+        position-sequential and the windowed ring buffer has no
+        chunk-at-offset write, so ``EngineConfig.prefill_mode="flash"``
+        resolves back to this scan body for the hybrid family."""
         return decode_prefill_chunk(self, params, batch, cache, offset,
                                     nvalid)

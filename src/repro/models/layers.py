@@ -224,6 +224,31 @@ def _flash_core(qg: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(compute_dtype)
 
 
+def _flash_chunk_core(qg: jax.Array, k: jax.Array, v: jax.Array,
+                      q_off: jax.Array, compute_dtype) -> jax.Array:
+    """Chunked-prefill GQA through the engine's chunk flash kernel.
+
+    qg: [B, W, KV, G, dh] — one prefill chunk's queries, living at
+    absolute positions ``q_off + i``; k/v: [B, Skv, KV, dh] — the slot's
+    FULL cache (the chunk's K/V already written at ``q_off``). Same
+    [batch, kv_head, group]-major flattening and BlockSpec-index-map KV
+    sharing as ``_flash_core``; ``q_off`` is traced, so one compiled
+    program serves every chunk of width W regardless of where in the
+    prompt it lands.
+    """
+    from repro.kernels.flash_attention import (
+        flash_chunk_attention as _flash_chunk)
+
+    b, w, kvh, g, dh = qg.shape
+    skv = k.shape[1]
+    qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * kvh * g, w, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, dh)
+    out = _flash_chunk(qf, kf, vf, q_off=q_off, q_groups=g)
+    out = out.reshape(b, kvh, g, w, dh).transpose(0, 3, 1, 2, 4)
+    return out.astype(compute_dtype)
+
+
 def _attn_core(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
                k_pos: jax.Array, *, causal: bool, window: int,
                compute_dtype, chunked: bool = True) -> jax.Array:
@@ -285,6 +310,7 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_index: Optional[jax.Array] = None,
               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              chunk_valid: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
     """Unified attention.
 
@@ -293,6 +319,21 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
       decode: cache=(k,v) [B,Skv,KV,dh], cache_index = current position;
               x=[B,1,D]; q_pos = [cache_index].
       cross: cross_kv supplied (whisper); no cache/causality.
+      chunk prefill: ``chunk_valid`` supplied with s > 1 and a cache —
+              x is one prefill CHUNK whose tokens live at absolute
+              positions ``cache_index + i`` (``q_pos`` must carry
+              exactly those); only the first ``chunk_valid`` positions
+              are real (the rest is bucket padding). The chunk's K/V are
+              written into the cache at the traced offset by an EXACT
+              positional select — rows outside [cache_index,
+              cache_index + chunk_valid) keep their previous bits — and
+              every query attends the FULL cache, causally on absolute
+              positions (which also excludes not-yet-written rows).
+              Routed through the engine's chunk flash kernel
+              (``_flash_chunk_core``, compensated online softmax) when
+              ``st.kahan_attention``, else the materialized parallel
+              core. Ring buffers are NOT supported here (window layers'
+              families fall back to the per-position scan body).
 
     Sliding-window layers may allocate the cache as a RING BUFFER of length
     ``window`` (< full sequence): slot ``t % window`` holds step ``t``; the
@@ -314,11 +355,31 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
 
     new_cache = None
     ring = False
+    chunk_prefill = chunk_valid is not None and cache is not None and s > 1
     if cache is not None and cross_kv is None:
         ck, cv = cache
         s_alloc = ck.shape[1]
         ring = window > 0 and s_alloc == window
-        if s == 1:  # decode: insert at cache_index (mod window when ring)
+        if chunk_prefill:
+            if ring:
+                raise ValueError(
+                    "chunk-parallel prefill does not support ring-buffer "
+                    "caches; window layers' families must fall back to "
+                    "the per-position scan body")
+            # Write the chunk's K/V at the traced offset with an EXACT
+            # positional select (no dynamic_update_slice: its clamping
+            # near the cache end would silently shift rows). Rows outside
+            # [cache_index, cache_index + chunk_valid) keep their
+            # previous bits, so bucket padding never touches the cache.
+            rows = jnp.arange(s_alloc)
+            rel = rows - cache_index
+            keep = ((rel >= 0) & (rel < chunk_valid))[None, :, None, None]
+            src = jnp.clip(rel, 0, s - 1)
+            ck = jnp.where(keep, jnp.take(k, src, axis=1).astype(ck.dtype),
+                           ck)
+            cv = jnp.where(keep, jnp.take(v, src, axis=1).astype(cv.dtype),
+                           cv)
+        elif s == 1:  # decode: insert at cache_index (mod window when ring)
             slot = cache_index % s_alloc if ring else cache_index
             ck = jax.lax.dynamic_update_slice(
                 ck, k.astype(ck.dtype), (0, slot, 0, 0))
@@ -339,7 +400,7 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
             cv = jax.lax.dynamic_update_slice(
                 cv, v.astype(cv.dtype), (0, 0, 0, 0))
         new_cache = (ck, cv)
-        if s == 1:  # decode attends against the cache
+        if s == 1 or chunk_prefill:  # decode / chunk attend the cache
             k, v = ck.astype(cd), cv.astype(cd)
         # prefill attends against the in-flight k/v (full positions)
 
@@ -369,6 +430,17 @@ def attention(p: Params, st: AttnStatic, x: jax.Array, *,
                               jnp.iinfo(jnp.int32).max)
             out = _attn_core(qg, k, v, q_pos, k_pos, causal=True,
                              window=window, compute_dtype=cd)
+    elif chunk_prefill:
+        # one prefill CHUNK against the full cache at a traced offset:
+        # causal masking on absolute positions subsumes excluding rows
+        # past the chunk (a query at position p never reads keys > p, and
+        # every key <= p is already written — earlier chunks filled the
+        # prefix, the select above wrote this chunk's valid rows).
+        if st.kahan_attention:
+            out = _flash_chunk_core(qg, k, v, cache_index, cd)
+        else:
+            out = _attn_core(qg, k, v, q_pos, jnp.arange(s_kv), causal=True,
+                             window=0, compute_dtype=cd, chunked=True)
     else:
         # cache present -> prefill (chunked); cache None -> training (SP
         # bounds the score slab; see _attn_core docstring)

@@ -31,6 +31,7 @@ from repro.models.common import (
     decode_logits,
     init_embed_and_head,
     lm_head_weight,
+    parallel_chunk_logits,
     prefill_chunk_scan,
     stack_init,
 )
@@ -87,6 +88,15 @@ class TransformerLM:
                              kahan_matmul=cfg.kahan_matmul,
                              kahan_attention=cfg.kahan_attention)
         self.segments = plan_segments(cfg)
+        # Parallel (multi-token) chunk prefill works where one forward
+        # pass over the chunk is semantically position-independent: MLA
+        # has no chunk-at-offset attention form, sliding-window layers
+        # may allocate ring caches, and MoE capacity routing would let
+        # bucket-padding tokens steal expert capacity from real ones
+        # (chunk-width-dependent results). Those configs keep the
+        # per-position scan body.
+        self.parallel_prefill_ok = (cfg.mla is None and cfg.moe is None
+                                    and cfg.sliding_window <= 0)
 
     # ------------------------------------------------------------------ init
     def _block_init(self, kind: str):
@@ -140,7 +150,7 @@ class TransformerLM:
 
     # --------------------------------------------------------------- forward
     def _apply_block(self, kind: str, p: Params, x: jax.Array, *,
-                     q_pos, cache=None, cache_index=None):
+                     q_pos, cache=None, cache_index=None, chunk_valid=None):
         """Returns (x, new_cache, aux_loss_sum, dropped)."""
         cfg = self.cfg
 
@@ -154,7 +164,7 @@ class TransformerLM:
                 attn_out, new_cache = attention(
                     p_one["attn"], self.st, a_in, q_pos=q_pos,
                     window=cfg.sliding_window, cache=cache_one,
-                    cache_index=cache_index)
+                    cache_index=cache_index, chunk_valid=chunk_valid)
             # named for the remat policy: saving the (small) per-layer
             # attention output lets the backward pass recompute the fp32
             # score/softmax chain ONCE instead of twice (§Perf I4)
@@ -177,7 +187,8 @@ class TransformerLM:
 
     def _run_segments(self, params: Params, x: jax.Array, *, q_pos,
                       caches: Optional[Dict[str, Any]] = None,
-                      cache_index=None, remat: bool = False):
+                      cache_index=None, remat: bool = False,
+                      chunk_valid=None):
         new_caches: Dict[str, Any] = {}
         aux_total = jnp.zeros((), jnp.float32)
         drop_total = jnp.zeros((), jnp.float32)
@@ -187,7 +198,8 @@ class TransformerLM:
 
             def apply_one(p_l, x, c_l, _kind=seg.kind):
                 return self._apply_block(_kind, p_l, x, q_pos=q_pos,
-                                         cache=c_l, cache_index=cache_index)
+                                         cache=c_l, cache_index=cache_index,
+                                         chunk_valid=chunk_valid)
 
             if remat:
                 # plain full-recompute remat. Measured (§Perf I4): saving
@@ -346,3 +358,44 @@ class TransformerLM:
 
         return prefill_chunk_scan(step, batch["tokens"], cache, offset,
                                   nvalid, cfg.padded_vocab)
+
+    def prefill_chunk_parallel(self, params: Params,
+                               batch: Dict[str, jax.Array],
+                               cache: Dict[str, Any], offset: jax.Array,
+                               nvalid: jax.Array,
+                               ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Multi-token chunk prefill: ONE forward pass over the whole
+        chunk (same ``(logits, cache)`` contract as ``prefill_chunk``,
+        which remains the per-position oracle).
+
+        The chunk's tokens live at absolute positions ``offset + i``;
+        attention writes the chunk's K/V into the cache at the traced
+        offset and attends the FULL cache through the engine's chunk
+        flash kernel (``layers.attention`` chunk-prefill mode) — one MXU
+        pass instead of ``w`` sequential decode-speed steps. VLM prompts
+        splice ``batch["vision_embeds"]`` at the same traced positions
+        as the scan body (exact gather + select). Bucket-padding
+        positions past ``nvalid`` run but their cache writes are
+        discarded by the exact positional select and the returned logits
+        come from the last VALID position. Configs the parallel body
+        cannot serve (``parallel_prefill_ok`` False: MLA, MoE, sliding
+        window) delegate to the per-position scan.
+        """
+        cfg = self.cfg
+        if not self.parallel_prefill_ok:
+            return self.prefill_chunk(params, batch, cache, offset, nvalid)
+        cd = _dtype(cfg.compute_dtype)
+        tokens = batch["tokens"]                      # [1, w]
+        w = tokens.shape[-1]
+        pos = offset + jnp.arange(w)
+        x = embed_lookup(params["embed"], tokens, cd)  # [1, w, D]
+        if cfg.vision is not None and "vision_embeds" in batch:
+            npch = cfg.vision.n_patches
+            vis = batch["vision_embeds"].astype(cd)   # [1, n_patches, D]
+            v = jnp.take(vis, jnp.clip(pos, 0, npch - 1), axis=1)
+            x = jnp.where((pos < npch)[None, :, None], v, x)
+        x, new_caches, _, _ = self._run_segments(
+            params, x, q_pos=pos, caches=cache, cache_index=offset,
+            chunk_valid=nvalid)
+        x = norm_apply(params["final_norm"], x, cfg.norm)
+        return parallel_chunk_logits(x, params, cfg, nvalid), new_caches

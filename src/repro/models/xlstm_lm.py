@@ -163,6 +163,11 @@ class XLSTMLM:
 
     def prefill_chunk(self, params, batch, cache, offset, nvalid):
         """Resume-from-offset prefill: the O(1) recurrent state makes the
-        offset implicit — the per-position body is ``decode_step``."""
+        offset implicit — the per-position body is ``decode_step``.
+
+        No ``prefill_chunk_parallel`` here: the xLSTM recurrence is
+        position-sequential (each step folds the previous hidden
+        state), so ``EngineConfig.prefill_mode="flash"`` resolves back
+        to this scan body for the xLSTM family."""
         return decode_prefill_chunk(self, params, batch, cache, offset,
                                     nvalid)

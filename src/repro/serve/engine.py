@@ -79,13 +79,31 @@ ONE ``repro.kernels.Policy`` (``EngineConfig.policy``) selects the
 compensation scheme / unroll / accumulate dtype for everything the
 engine computes — the telemetry norms here, and the model's own
 projections when ``ArchConfig.kahan_matmul`` routes them through the
-kernels. NOTE: ``ArchConfig.kahan_attention`` routes the PARALLEL
-multi-token prefill (``model.prefill`` — training-adjacent callers,
-dry-run shape cells) through the engine's flash kernel; the serving
-engine's prefill is per-position by construction (that is what carries
-the chunked bitwise contract), so it never takes that path — a parallel
-chunk body behind the same contract is the ROADMAP next step that would
-restore flash-prefill coverage here.
+kernels.
+
+PARALLEL (FLASH) PREFILL (``EngineConfig.prefill_mode = "flash"``): the
+per-position scan body above is decode-speed — a w-token chunk costs w
+sequential steps. The flash mode swaps in the families'
+``prefill_chunk_parallel``: ONE forward pass over the whole chunk, with
+attention running through the engine's chunk flash kernel
+(``CompensatedReduction.flash_chunk_attention`` — compensated online
+softmax against the slot's full KV cache at a TRACED offset, causal on
+absolute positions) and the projections through ``ops.matmul`` when
+``ArchConfig.kahan_matmul`` — so ``kahan_attention``'s kernel now
+serves traffic and prefill tokens/s scales with chunk width (the
+paper's "compensation is free once you vectorize", in serving form).
+Contract under flash mode: solo-vs-interleaved stays BITWISE (chunk
+programs are keyed by (width, runs_begin) only and operate on the
+request's own gathered row); chunked-vs-one-shot compares EXACT tokens
+with a pinned, documented telemetry tolerance — XLA vectorizes the
+fused softmax/projection ops shape-dependently across widths, so
+cross-width equality is allclose-at-~1-ulp, not bitwise. The
+per-position scan body REMAINS the oracle (and the default). Families
+whose recurrence forces per-position stepping — hybrid (ring-buffer
+window KV + SSM state) and xLSTM (recurrent cell state) — and configs
+the parallel body cannot serve (MLA, MoE capacity routing, sliding
+window) fall back to the scan body; ``engine.prefill_body`` reports
+the resolved choice.
 """
 
 from __future__ import annotations
@@ -146,6 +164,19 @@ class EngineConfig:
                    ``engine.handles`` (oldest-finished evicted first);
                    None = retain all (callers can still drain with
                    ``pop_finished()``)
+    prefill_mode   which traced body advances a prefill chunk: "scan"
+                   (default — the per-position ``lax.scan`` of the
+                   family's decode body; carries the cross-width bitwise
+                   contract and stays the oracle) or "flash" (the
+                   parallel multi-token chunk body: ONE forward pass per
+                   chunk through the engine's chunk flash kernel /
+                   ``ops.matmul`` — prefill becomes MXU work and tokens/s
+                   scales with chunk width). Families whose recurrence
+                   forces per-position stepping (hybrid ring/SSM, xLSTM)
+                   — and configs the parallel body cannot serve (MLA,
+                   MoE capacity routing, sliding window) — fall back to
+                   the scan body under "flash"; see
+                   ``InferenceEngine.prefill_body``
     """
 
     max_slots: int = 4
@@ -157,11 +188,16 @@ class EngineConfig:
     prefill_chunk: Optional[int] = 64
     prefill_budget: Optional[int] = None
     max_finished: Optional[int] = None
+    prefill_mode: str = "scan"
 
     def __post_init__(self):
         if self.slot_loop not in ("scan", "vmap"):
             raise ValueError(
                 f"slot_loop must be 'scan' or 'vmap', got {self.slot_loop!r}")
+        if self.prefill_mode not in ("scan", "flash"):
+            raise ValueError(
+                f"prefill_mode must be 'scan' or 'flash', "
+                f"got {self.prefill_mode!r}")
         if self.max_len < 1:
             raise ValueError(f"max_len must be >= 1, got {self.max_len}")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
@@ -262,10 +298,13 @@ class _ServePrograms:
     """The engine's compiled callables: one decode ``tick`` plus
     lazily-built prefill chunk programs keyed by (width, runs_begin) —
     the ONLY shape parameters a chunk program has, which is what makes
-    the compiled prefill program set O(#buckets)."""
+    the compiled prefill program set O(#buckets). ``prefill_body``
+    records which chunk body the programs trace ("scan" or "flash" —
+    the RESOLVED body, after any family fallback)."""
 
-    def __init__(self, tick, prefill_factory):
+    def __init__(self, tick, prefill_factory, prefill_body: str = "scan"):
         self.tick = tick
+        self.prefill_body = prefill_body
         self._factory = prefill_factory
         self._prefill: Dict[Tuple[int, bool], Any] = {}
 
@@ -286,8 +325,20 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
     tests) share compiled code — widths shared between a chunked and a
     one-shot engine resolve to the SAME program.
     """
+    # Resolve the chunk body ONCE: "flash" engines over a family whose
+    # recurrence forces per-position stepping (hybrid ring/SSM, xLSTM —
+    # no ``prefill_chunk_parallel``) or whose config the parallel body
+    # cannot serve (``parallel_prefill_ok`` False: MLA, MoE, sliding
+    # window) fall back to the scan body. The cache key carries the
+    # RESOLVED body, so a flash engine over a fallback family shares its
+    # programs with the scan engine.
+    prefill_body = "scan"
+    if (ec.prefill_mode == "flash"
+            and getattr(model, "parallel_prefill_ok", False)
+            and hasattr(model, "prefill_chunk_parallel")):
+        prefill_body = "flash"
     key = ("serve", ec.max_slots, ec.max_len, ec.track_stats,
-           ec.sample_seed, ec.slot_loop, policy)
+           ec.sample_seed, ec.slot_loop, policy, prefill_body)
     cache = model.__dict__.setdefault("_serve_compiled", {})
     if key in cache:
         return cache[key]
@@ -375,16 +426,19 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
         return new_cache, next_tok, norms
 
     begin = getattr(model, "prefill_begin", None)
+    chunk_fn = (model.prefill_chunk_parallel if prefill_body == "flash"
+                else model.prefill_chunk)
 
     def prefill_factory(width: int, first: bool):
         """One jitted prefill-chunk program for a static chunk width.
 
         Gathers the request's batch-1 row from its slot, (optionally)
-        runs the family's one-time ``prefill_begin`` setup, scans the
-        shared per-position body over the chunk, scatters the row back,
-        and samples emit 0 + its telemetry norm from the carried
-        last-valid-position logits (the engine uses them only when this
-        was the request's final chunk)."""
+        runs the family's one-time ``prefill_begin`` setup, advances the
+        row by the chunk through the resolved body — the per-position
+        scan, or (``prefill_mode="flash"``) the family's parallel
+        multi-token pass — scatters the row back, and samples emit 0 +
+        its telemetry norm from the last-valid-position logits (the
+        engine uses them only when this was the request's final chunk)."""
 
         @functools.partial(jax.jit, donate_argnums=tuple(
             1 + i for i in _donate()))
@@ -396,8 +450,7 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
                     # not depend on which width the first chunk has
                     row = jax.lax.optimization_barrier(
                         begin(params, batch, row))
-                logits, row = model.prefill_chunk(params, batch, row,
-                                                  offset, nvalid)
+                logits, row = chunk_fn(params, batch, row, offset, nvalid)
                 new_cache = scatter_row(cache, row, batch_axes, slot)
                 k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
                                        jnp.int32(0))
@@ -408,7 +461,7 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
 
         return prefill
 
-    fns = _ServePrograms(tick, prefill_factory)
+    fns = _ServePrograms(tick, prefill_factory, prefill_body)
     cache[key] = fns
     return fns
 
@@ -443,6 +496,9 @@ class InferenceEngine:
         # model-wide, so a solo-replay engine reuses the loaded engine's)
         self._used_prefill: set = set()
         self._next_id = 0
+        # (request_id, width, body) of every prefill chunk the MOST
+        # RECENT step() ran — the launcher's per-chunk logging surface
+        self.last_chunks: List[Tuple[int, int, str]] = []
         self.t = 0                       # engine step counter
         self.handles: Dict[int, RequestHandle] = {}
         self._finished: Deque[int] = collections.deque()
@@ -510,6 +566,7 @@ class InferenceEngine:
         Returns the tokens emitted this step, prefill completions first.
         """
         events: List[TokenEvent] = []
+        self.last_chunks = []
         sch = self.scheduler
 
         # -- admissions + budgeted chunked prefill ------------------------
@@ -569,6 +626,7 @@ class InferenceEngine:
                                     self.ec.prefill_chunk)
         first = offset == 0 and self._needs_begin
         self._used_prefill.add((width, first))
+        self.last_chunks.append((h.request_id, width, self.prefill_body))
         fn = self._fns.prefill(width, first)
         sp = h.request.sampling
         new_cache, tok, norm = fn(
@@ -643,6 +701,14 @@ class InferenceEngine:
                 s((), jnp.int32), s((), jnp.int32), s((), jnp.int32),
                 s((), jnp.float32))
         return self._fns.prefill(width, first), args
+
+    @property
+    def prefill_body(self) -> str:
+        """The RESOLVED chunk body this engine's prefill programs trace:
+        "flash" only when ``EngineConfig.prefill_mode == "flash"`` AND
+        the family can take the parallel path (hybrid/xlstm recurrence
+        and MLA / MoE / sliding-window configs fall back to "scan")."""
+        return self._fns.prefill_body
 
     @property
     def prefill_programs(self) -> Tuple[Tuple[int, bool], ...]:

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref, schemes
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import flash_attention, flash_chunk_attention
 
 
 def _ref(q, k, v, causal):
@@ -150,3 +150,94 @@ def test_gqa_head_count_mismatch_fails_fast():
     k = jnp.zeros((4, 8, 16), jnp.float32)
     with pytest.raises(ValueError, match="q_groups"):
         flash_attention(q, k, k, q_groups=3)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill entry: queries at a TRACED absolute offset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", schemes.names())
+def test_chunk_kernel_matches_full_kernel_bitwise_at_aligned_offset(scheme):
+    """The serving-side bitwise bar for the chunk grid: when the traced
+    offset is a multiple of block_q, the chunk kernel walks exactly the
+    q-block row the full causal grid walks — same k-blocks, same masks,
+    same fold order — so its rows equal the full kernel's rows to the
+    BIT, for every registered scheme."""
+    rng = np.random.default_rng(31)
+    bh, skv, dh, bq = 2, 256, 64, 128
+    q = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    full = flash_attention(q, k, v, block_q=bq, block_k=128, scheme=scheme,
+                           causal=True)
+    for off in (0, 128):                      # both multiples of block_q
+        chunk = flash_chunk_attention(
+            q[:, off:off + bq], k, v, q_off=jnp.int32(off), block_q=bq,
+            block_k=128, scheme=scheme)
+        assert np.array_equal(np.asarray(chunk),
+                              np.asarray(full[:, off:off + bq])), (
+            f"{scheme}: chunk at aligned offset {off} diverges from the "
+            "full causal kernel")
+
+
+def test_chunk_kernel_arbitrary_offset_matches_softmax_ref():
+    """At a NON-aligned traced offset the chunk's k-block tiling differs
+    from the full grid (no bitwise claim) but the function is the same:
+    causal softmax over absolute positions."""
+    rng = np.random.default_rng(37)
+    bh, skv, dh, off, w = 2, 256, 64, 37, 64
+    q = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    chunk = flash_chunk_attention(q[:, off:off + w], k, v,
+                                  q_off=jnp.int32(off), block_q=64,
+                                  block_k=128, scheme="kahan")
+    want = _ref(q, k, v, causal=True)[:, off:off + w]
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_kernel_offset_is_traced_not_compiled_in():
+    """ONE compiled chunk program serves every offset: jit the entry
+    with q_off as a traced operand and check two offsets reuse the
+    trace while agreeing with the full kernel rows."""
+    rng = np.random.default_rng(41)
+    bh, skv, dh, bq = 1, 256, 64, 128
+    q = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, skv, dh)), jnp.float32)
+
+    traces = []
+
+    @jax.jit
+    def run(qc, off):
+        traces.append(None)                    # counts retraces
+        return flash_chunk_attention(qc, k, v, q_off=off, block_q=bq,
+                                     block_k=128, scheme="kahan")
+
+    full = flash_attention(q, k, v, block_q=bq, block_k=128, scheme="kahan",
+                           causal=True)
+    for off in (0, 128):
+        got = run(q[:, off:off + bq], jnp.int32(off))
+        assert np.array_equal(np.asarray(got),
+                              np.asarray(full[:, off:off + bq]))
+    assert len(traces) == 1, "q_off must be traced, not a compile-time const"
+
+
+def test_chunk_kernel_gqa_matches_broadcast_bitwise():
+    """The chunk grid routes GQA through the same bh // q_groups
+    BlockSpec index map as the full grid — grouped == broadcast to the
+    bit at an aligned offset."""
+    rng = np.random.default_rng(43)
+    b, kvh, g, skv, dh, off, w = 1, 2, 2, 256, 64, 128, 128
+    q = jnp.asarray(rng.standard_normal((b * kvh * g, skv, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b * kvh, skv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b * kvh, skv, dh)), jnp.float32)
+    grouped = flash_chunk_attention(q[:, off:off + w], k, v,
+                                    q_off=jnp.int32(off), block_q=128,
+                                    block_k=128, scheme="kahan", q_groups=g)
+    kb, vb = jnp.repeat(k, g, axis=0), jnp.repeat(v, g, axis=0)
+    broadcast = flash_chunk_attention(q[:, off:off + w], kb, vb,
+                                      q_off=jnp.int32(off), block_q=128,
+                                      block_k=128, scheme="kahan")
+    assert np.array_equal(np.asarray(grouped), np.asarray(broadcast))

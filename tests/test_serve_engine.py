@@ -359,6 +359,227 @@ def test_prefill_budget_bounds_head_of_line(tiny_model):
     assert eng_b.handles[1].tokens == eng_o.handles[1].tokens
 
 
+# ---------------------------------------------------------------------------
+# Parallel (flash) prefill: the multi-token chunk body
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_flash():
+    """Flash-capable twin of ``tiny_model``: ``kahan_attention=True``
+    routes the parallel chunk body through the engine's chunk flash
+    kernel (the scan body and decode are untouched — they stay the
+    oracle)."""
+    cfg = _tiny_cfg(kahan_attention=True)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(4))
+    return cfg, model, params
+
+
+# Pinned tolerance for scan-vs-flash chunk bodies: the two bodies
+# compute the same function but reassociate differently (per-position
+# scan accumulates one KV row at a time; the fused chunk body folds
+# block_k-wide online-softmax partials), so agreement is allclose, not
+# bitwise. 1e-5 on an fp32 tiny config leaves ~two decades of headroom
+# over the observed ~1e-7 drift.
+_SCAN_VS_FLASH_TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _drive_chunks(model, params, prompt, max_len, body, chunks, extras=None):
+    """Replay the engine's chunk schedule against one model body.
+
+    ``chunks``: [(width, nvalid), ...] — width is the padded (bucketed)
+    program width, nvalid the real token count, exactly what the
+    scheduler hands the chunk program."""
+    fn = (model.prefill_chunk if body == "scan"
+          else model.prefill_chunk_parallel)
+    cache, _ = model.init_cache(1, max_len)
+    if extras and hasattr(model, "prefill_begin"):
+        cache = model.prefill_begin(
+            params, {"tokens": jnp.zeros((1, 1), jnp.int32), **extras},
+            cache)
+    logits, off = None, 0
+    for width, nvalid in chunks:
+        padded = np.zeros((width,), np.int32)
+        padded[:nvalid] = prompt[off:off + nvalid]
+        batch = {"tokens": jnp.asarray(padded[None]), **(extras or {})}
+        logits, cache = fn(params, batch, cache, jnp.int32(off),
+                           jnp.int32(nvalid))
+        off += nvalid
+    return logits, cache
+
+
+@pytest.mark.parametrize("scheme", ["naive", "kahan", "pairwise", "dot2"])
+@pytest.mark.parametrize("chunks", [
+    [(4, 4), (4, 4)],          # full-width chunks only
+    [(4, 4), (4, 3)],          # power-of-two-bucketed tail (pad row live)
+], ids=["full", "tail"])
+def test_parallel_chunk_body_matches_scan_body(tiny_flash, scheme, chunks):
+    """THE promoted scan-vs-flash gate, per registered scheme and for
+    both full-chunk and bucketed-tail widths: the parallel chunk body
+    (one fused forward per chunk, flash kernel at a traced offset) must
+    compute the same function as the per-position scan oracle — logits
+    and every cache row within tolerance, and cache rows past
+    offset+nvalid BITWISE pristine (bucket padding must never write)."""
+    from repro.kernels import use_policy
+
+    cfg, model, params = tiny_flash
+    plen = sum(nv for _, nv in chunks)
+    rng = np.random.default_rng(plen + len(scheme))
+    prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+    with use_policy(Policy(scheme=scheme, unroll=2)):
+        ref_logits, ref_cache = _drive_chunks(model, params, prompt, 16,
+                                              "scan", chunks)
+        par_logits, par_cache = _drive_chunks(model, params, prompt, 16,
+                                              "flash", chunks)
+    np.testing.assert_allclose(np.asarray(par_logits),
+                               np.asarray(ref_logits),
+                               **_SCAN_VS_FLASH_TOL)
+    pristine, _ = model.init_cache(1, 16)
+    for got, want, init in zip(jax.tree.leaves(par_cache),
+                               jax.tree.leaves(ref_cache),
+                               jax.tree.leaves(pristine)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **_SCAN_VS_FLASH_TOL)
+        if got.ndim == 5:                      # [L, B, max_len, KV, dh]
+            assert np.array_equal(np.asarray(got[:, :, plen:]),
+                                  np.asarray(init[:, :, plen:])), (
+                f"{scheme}: bucket-pad rows past offset+nvalid were "
+                "written — the exact gather+select cache write regressed")
+
+
+@pytest.mark.parametrize("scheme", [
+    "kahan",
+    pytest.param("naive", marks=pytest.mark.slow),
+    pytest.param("pairwise", marks=pytest.mark.slow),
+    pytest.param("dot2", marks=pytest.mark.slow),
+])
+def test_flash_prefill_solo_vs_interleaved_bitwise(tiny_flash, scheme):
+    """Flash mode carries the headline serving contract UNCHANGED: a
+    request's tokens and telemetry are bitwise identical solo vs
+    interleaved (the chunk schedule, offsets and program widths are a
+    pure function of the request's own prompt, and the fused body is
+    deterministic per program)."""
+    cfg, model, params = tiny_flash
+    ec = _ec(scheme, prefill_chunk=4, prefill_mode="flash")
+    _assert_bitwise(cfg, ec, model, params,
+                    _requests(cfg, [(5, 3), (8, 2), (3, 4)],
+                              seed=len(scheme)),
+                    arrivals=[0, 1, 2])
+
+
+@pytest.mark.parametrize("scheme", [
+    "kahan",
+    pytest.param("naive", marks=pytest.mark.slow),
+    pytest.param("pairwise", marks=pytest.mark.slow),
+    pytest.param("dot2", marks=pytest.mark.slow),
+])
+def test_flash_vs_scan_mode_tokens_exact_telemetry_close(tiny_flash, scheme):
+    """Chunked-vs-one-shot across BODIES: flash-mode serving emits
+    exactly the scan-mode tokens; telemetry agrees to the pinned
+    tolerance (NOT bitwise — the fused chunk body reassociates the
+    softmax folds, see _SCAN_VS_FLASH_TOL). The program set stays drawn
+    from the bucket family and the engine reports the resolved body."""
+    cfg, model, params = tiny_flash
+    reqs = _requests(cfg, [(5, 3), (8, 2), (3, 4)], seed=len(scheme))
+    arrivals = [0, 1, 2]
+
+    def serve(**kw):
+        eng = InferenceEngine(cfg, _ec(scheme, prefill_chunk=4, **kw),
+                              model=model, params=params)
+        return eng.run(reqs, arrivals), eng
+
+    scan_served, eng_scan = serve()
+    flash_served, eng_flash = serve(prefill_mode="flash")
+    assert eng_scan.prefill_body == "scan"
+    assert eng_flash.prefill_body == "flash"
+    assert {w for w, _ in eng_flash.prefill_programs} <= {1, 2, 4}
+    for req in reqs:
+        rid = req.request_id
+        assert flash_served[rid].tokens == scan_served[rid].tokens, (
+            f"request {rid}: tokens diverge flash vs scan body")
+        np.testing.assert_allclose(flash_served[rid].telemetry,
+                                   scan_served[rid].telemetry,
+                                   **_SCAN_VS_FLASH_TOL)
+
+
+@pytest.mark.slow  # widest-chunk flash bitwise sweep (8-wide fused programs)
+def test_flash_prefill_widest_chunk_bitwise(tiny_flash):
+    """The widest chunk the tiny cache admits (8): solo-vs-interleaved
+    stays bitwise and the 8-token prompt runs as ONE fused program."""
+    cfg, model, params = tiny_flash
+    ec = _ec("kahan", prefill_chunk=8, prefill_mode="flash")
+    _assert_bitwise(cfg, ec, model, params,
+                    _requests(cfg, [(5, 3), (8, 2), (3, 4)], seed=8),
+                    arrivals=[0, 1, 2])
+
+
+def test_parallel_chunk_body_vlm_and_encdec_match_scan():
+    """Family coverage for the parallel body: the VLM vision splice at
+    traced chunk positions and the encdec decoder (self-attention
+    through the chunk flash kernel, cross-attention over the
+    ``prefill_begin``-cached memory) both match their scan oracles."""
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(0, 128, (7,)).astype(np.int32)
+    chunks = [(4, 4), (4, 3)]
+
+    vcfg = ArchConfig(name="tiny-vlm-flash", family="vlm", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=128, vision=VisionStubConfig(n_patches=4),
+                      kahan_attention=True, param_dtype="float32",
+                      compute_dtype="float32", loss_chunk=64)
+    vmodel = build_model(vcfg)
+    vparams, _ = vmodel.init(jax.random.key(6))
+    vex = {"vision_embeds": jnp.asarray(rng.standard_normal((1, 4, 32)),
+                                        jnp.float32)}
+    vref, _ = _drive_chunks(vmodel, vparams, prompt, 16, "scan", chunks,
+                            extras=vex)
+    vpar, _ = _drive_chunks(vmodel, vparams, prompt, 16, "flash", chunks,
+                            extras=vex)
+    np.testing.assert_allclose(np.asarray(vpar), np.asarray(vref),
+                               **_SCAN_VS_FLASH_TOL)
+
+    ecfg = ArchConfig(name="tiny-encdec-flash", family="encdec", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=4, d_ff=64,
+                      vocab_size=128,
+                      encoder=EncoderConfig(n_layers=1, n_frames=6),
+                      kahan_attention=True, param_dtype="float32",
+                      compute_dtype="float32", loss_chunk=64)
+    emodel = build_model(ecfg)
+    eparams, _ = emodel.init(jax.random.key(7))
+    eex = {"frames": jnp.asarray(rng.standard_normal((1, 6, 32)),
+                                 jnp.float32)}
+    eref, _ = _drive_chunks(emodel, eparams, prompt, 16, "scan", chunks,
+                            extras=eex)
+    epar, _ = _drive_chunks(emodel, eparams, prompt, 16, "flash", chunks,
+                            extras=eex)
+    np.testing.assert_allclose(np.asarray(epar), np.asarray(eref),
+                               **_SCAN_VS_FLASH_TOL)
+
+
+def test_flash_mode_falls_back_per_position_when_unsupported(tiny_model):
+    """Configs the parallel body cannot serve (here: a sliding-window
+    ring cache, whose wrap-around write has no chunk-at-offset form)
+    resolve to the scan body under ``prefill_mode="flash"`` — same
+    programs, same bits, and ``engine.prefill_body`` says so."""
+    cfg = _tiny_cfg(sliding_window=8)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(5))
+    reqs = _requests(cfg, [(5, 2), (9, 2)], seed=47)  # 9 wraps the ring
+
+    def serve(mode):
+        eng = InferenceEngine(cfg, _ec(prefill_chunk=4, prefill_mode=mode),
+                              model=model, params=params)
+        return eng.run(reqs), eng
+
+    scan_served, _ = serve("scan")
+    flash_served, eng = serve("flash")
+    assert eng.prefill_body == "scan"
+    for req in reqs:
+        rid = req.request_id
+        assert flash_served[rid].tokens == scan_served[rid].tokens
+        assert flash_served[rid].telemetry == scan_served[rid].telemetry
+
+
 def test_chunk_scan_prefill_matches_parallel_prefill(tiny_model):
     """Semantic guard against the chunk body and the one-shot path being
     identically wrong: the shared per-position prefill body must compute
@@ -530,9 +751,12 @@ def test_engine_config_validation():
         EngineConfig(prefill_budget=0)
     with pytest.raises(ValueError, match="max_finished"):
         EngineConfig(max_finished=-1)
-    # the None sentinels stay legal
+    with pytest.raises(ValueError, match="prefill_mode"):
+        EngineConfig(prefill_mode="bogus")
+    # the None sentinels (and both chunk bodies) stay legal
     EngineConfig(prefill_chunk=None, prefill_budget=None, max_finished=None)
     EngineConfig(max_finished=0)
+    EngineConfig(prefill_mode="flash")
 
 
 def test_release_invariant_is_a_real_exception(tiny_model):
