@@ -16,6 +16,16 @@ families track that:
   the long prompt); chunked prefill under a 1-chunk budget bounds the
   gap by one chunk of prefill work. ``derived`` carries the long
   request's time-to-first-token for the same trace.
+* ``serve_paged_<scheme>_occ<k>`` — the SAME occupancy sweep under
+  ``kv_layout="paged"``: the page-pool gather/scatter boundary rides
+  every tick (tokens and telemetry stay bitwise-equal to the dense
+  rows), so paged-vs-dense at equal occupancy is the layout's whole
+  overhead.
+* ``serve_prefix_hit<f>`` — admission tokens/s when f% of a request's
+  prompt is already resident in the radix prefix cache (a donor request
+  populated it): hit0 pays the full prefill, hit100 admits almost
+  entirely by reference and re-prefills only the final position — its
+  admission rate must be >= 2x hit0 (the tentpole's acceptance bar).
 * ``serve_prefill_<mode>_c<width>_<scheme>`` — prefill tokens/s per
   chunk body (``scan`` = the per-position oracle, ``flash`` = one fused
   pass per chunk through the engine's chunk flash kernel), per chunk
@@ -126,6 +136,32 @@ def _interleave_stall(cfg, model, params, ec, long_len, short_new):
     return min(gaps), min(ttfts)
 
 
+def _prefix_admit_rate(cfg, model, params, ec, prompt_len, hit_frac):
+    """Admission tokens/s with ``hit_frac`` of the prompt resident in
+    the prefix cache, best-of-3. Each iteration uses a FRESH engine
+    (fresh pool + tree); an untimed donor request seeds the resident
+    prefix, then the timed request admits against it (1 new token ->
+    the run is ~all admission work)."""
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, (prompt_len,)).astype(np.int32)
+    donor_len = int(prompt_len * hit_frac)
+    best = float("inf")
+    for it in range(4):                 # iteration 0 warms the programs
+        eng = InferenceEngine(cfg, ec, model=model, params=params)
+        if donor_len:
+            eng.run([Request(prompt=prompt[:donor_len],
+                             sampling=SamplingParams(max_new_tokens=1),
+                             request_id=0)])
+        req = Request(prompt=prompt,
+                      sampling=SamplingParams(max_new_tokens=1),
+                      request_id=1)
+        t0 = time.perf_counter()
+        eng.run([req])
+        if it:
+            best = min(best, time.perf_counter() - t0)
+    return prompt_len / best
+
+
 def main(max_slots: int = 4, prompt_len: int = 16, new_tokens: int = 16,
          prefill_len: int = 256, prefill_widths=(16, 64)) -> None:
     print(f"# serving engine: max_slots={max_slots} prompt={prompt_len} "
@@ -146,6 +182,40 @@ def main(max_slots: int = 4, prompt_len: int = 16, new_tokens: int = 16,
                                   prompt_len, new_tokens)
             emit(f"serve_{name}_occ{occ}", dt * 1e6 / max(n_tok, 1),
                  f"{n_tok / dt:.1f}tok/s")
+
+    # paged-layout occupancy sweep: same trace, page-pool boundary on
+    print(f"# paged KV layout: the same occupancy sweep with "
+          f"kv_layout='paged' (page_size=4) — bitwise-identical tokens, "
+          f"the row delta vs serve_<scheme>_occ<k> is the gather/scatter "
+          f"overhead")
+    for name in schemes.names():
+        ec = EngineConfig(max_slots=max_slots,
+                          max_len=prompt_len + new_tokens,
+                          track_stats=True, kv_layout="paged", page_size=4,
+                          policy=Policy(scheme=name, unroll=2))
+        _run_once(cfg, model, params, ec, 1, prompt_len, 2)
+        for occ in range(1, max_slots + 1):
+            n_tok, dt = _run_once(cfg, model, params, ec, occ,
+                                  prompt_len, new_tokens)
+            emit(f"serve_paged_{name}_occ{occ}", dt * 1e6 / max(n_tok, 1),
+                 f"{n_tok / dt:.1f}tok/s")
+
+    # prefix-cache admission: tokens/s vs resident prompt fraction
+    plen = prefill_len
+    print(f"# prefix-cache admission: prompt={plen}, page_size=16, "
+          f"chunk=16 — hit<f> = f% of the prompt resident from a donor; "
+          f"hit100 must admit >= 2x faster than hit0")
+    ec = EngineConfig(max_slots=2, max_len=plen + 16, prefill_chunk=16,
+                      kv_layout="paged", page_size=16, prefix_cache=True,
+                      policy=Policy(scheme="kahan", unroll=2))
+    hit_rates = {}
+    for pct in (0, 50, 100):
+        r = _prefix_admit_rate(cfg, model, params, ec, plen, pct / 100)
+        hit_rates[pct] = r
+        extra = f"{r:.0f}tok/s"
+        if pct:
+            extra += f" x{r / hit_rates[0]:.2f}vs-hit0"
+        emit(f"serve_prefix_hit{pct}", 1e6 / r, extra)
 
     # head-of-line row: long-prompt-vs-short-prompt interleave, chunked
     # (1-chunk budget) vs one-shot admit

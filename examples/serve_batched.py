@@ -8,13 +8,26 @@ is split into ``--prefill-chunk``-token chunks (partial tails round up
 to power-of-two buckets), so the mixed prompt lengths here compile a
 handful of prefill programs instead of one per distinct length, and
 ``--prefill-budget 1`` bounds how long any admission can stall the
-requests already decoding. Each request's tokens and compensated
-logit-norm telemetry are bitwise identical to serving it alone AND to
-one-shot (unchunked) prefill (see tests/test_serve_engine.py for the
-enforced contract).
+requests already decoding.
+
+The trace is also a SHARED-SYSTEM-PROMPT demo: every request starts
+with the same ``--system-len`` system-prompt tokens (the chat-template
+shape). Under the default paged KV layout with the prefix cache on,
+the first request to finish leaves its full prompt pages in the radix
+prefix tree, and every later admission walks the shared system prompt
+by REFERENCE — its page table points at the resident pages and chunked
+prefill resumes at the shared boundary (watch ``hit=`` climb in the
+step log). ``--dense`` reverts to the dense slot layout.
+
+Each request's tokens and compensated logit-norm telemetry are bitwise
+identical to serving it alone, to one-shot (unchunked) prefill, to the
+dense layout, AND to a private (unshared) prefill — the layout and the
+prefix cache are pure data-movement (see tests/test_serve_engine.py and
+tests/test_serve_paging.py for the enforced contract).
 
     PYTHONPATH=src python examples/serve_batched.py [--arch qwen2.5-3b] \
-        [--prefill-chunk 8] [--prefill-budget 1]
+        [--prefill-chunk 8] [--prefill-budget 1] [--system-len 16] \
+        [--dense]
 """
 
 import argparse
@@ -39,19 +52,31 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=1,
                     help="max prefill chunks per engine step (0 -> "
                          "unbounded)")
+    ap.add_argument("--system-len", type=int, default=16,
+                    help="shared system-prompt tokens prepended to every "
+                         "request (>= one 16-token page -> later "
+                         "admissions take it by reference from the "
+                         "prefix cache)")
+    ap.add_argument("--dense", action="store_true",
+                    help="use the dense slot layout (no page pool, no "
+                         "prefix cache) — same tokens, every prompt "
+                         "prefilled privately")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)  # reduced config: runnable on CPU
     rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab_size,
+                          (args.system_len,)).astype(np.int32)
     # mixed prompt/output lengths, staggered arrivals — the traffic shape
-    # the lock-step batch API could not express (and, one-shot, the shape
-    # that recompiled prefill on nearly every admission)
+    # the lock-step batch API could not express — all sharing the system
+    # prompt, the shape the prefix cache exists for
     requests, arrivals = [], []
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))
         new = int(rng.integers(2, args.new_tokens + 1))
+        user = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
         requests.append(Request(
-            prompt=rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+            prompt=np.concatenate([system, user]),
             sampling=SamplingParams(max_new_tokens=new)))
         arrivals.append(i // 2)  # two arrivals per engine step
     n_lengths = len({len(np.asarray(r.prompt)) for r in requests})
@@ -60,15 +85,25 @@ def main():
         cfg, EngineConfig(max_slots=args.max_slots, max_len=64,
                           track_stats=True,
                           prefill_chunk=args.prefill_chunk or None,
-                          prefill_budget=args.prefill_budget or None))
+                          prefill_budget=args.prefill_budget or None,
+                          kv_layout="dense" if args.dense else "paged",
+                          page_size=16,
+                          prefix_cache=not args.dense))
+    paged = engine.kv_layout == "paged"
     t0 = time.perf_counter()
     n_tok = 0
     for t, events in engine.stream(requests, arrivals):
         n_tok += len(events)
         line = ", ".join(f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
                          for e in events)
+        pages = ""
+        if paged:
+            st = engine.page_stats()
+            pages = (f" pages={st['pages_in_use']}/{st['num_pages']}"
+                     f" hit={st['prefix_hit_tokens']}tok")
         print(f"step {t:2d} occ={engine.scheduler.occupancy} "
-              f"prefilling={len(engine.scheduler.prefilling)}  {line}")
+              f"prefilling={len(engine.scheduler.prefilling)}{pages}  "
+              f"{line}")
     dt = time.perf_counter() - t0
 
     for rid, h in sorted(engine.handles.items()):
@@ -78,6 +113,11 @@ def main():
     print(f"{n_lengths} distinct prompt lengths -> {len(progs)} compiled "
           f"prefill programs {progs} "
           f"(one-shot would need {n_lengths})")
+    if paged:
+        st = engine.page_stats()
+        print(f"prefix cache: {st['prefix_hit_tokens']} prompt tokens "
+              f"admitted by reference ({st['prefix_pages']} resident "
+              f"pages; every token bitwise-equal to a private prefill)")
     print(f"wall: {dt:.2f}s  ({n_tok / dt:.1f} tok/s incl. compile, "
           f"{len(requests)} requests over {engine.t} steps)")
 

@@ -214,6 +214,21 @@ def _tiny_serve_flash():
 
 
 @functools.lru_cache(maxsize=None)
+def _tiny_serve_paged():
+    """The paged-layout sibling engine (page pool + traced page tables).
+
+    Same arch/geometry as :func:`_tiny_serve` so its programs differ
+    from the dense ones ONLY in the gather/scatter boundary — exactly
+    the surface the paged targets audit."""
+    from repro.serve import EngineConfig, InferenceEngine
+
+    return InferenceEngine(
+        tiny_arch(),
+        EngineConfig(max_slots=_SLOTS, max_len=_MAX_LEN,
+                     prefill_chunk=_CHUNK, kv_layout="paged", page_size=4))
+
+
+@functools.lru_cache(maxsize=None)
 def _mesh():
     from jax.sharding import Mesh
 
@@ -387,6 +402,51 @@ def _prefill_family_build() -> TraceArtifact:
 
 
 @functools.lru_cache(maxsize=None)
+def _paged_decode_tick_build() -> TraceArtifact:
+    """The paged decode tick: page-table gather -> the SAME pinned
+    decode body -> one-page scatter, threaded through the slot scan as
+    a carry. trace-decode-is-scan pins the trip count; the allocator
+    never appears here (reservation is host-side, at admission), so
+    trace-no-host-callback doubles as the no-host-sync guard on the
+    allocator boundary."""
+    engine = _tiny_serve_paged()
+    assert engine.kv_layout == "paged", (
+        "the audit's paged engine resolved to the dense layout")
+    fn, args = engine.trace_tick()
+    return TraceArtifact(jaxpr=jax.make_jaxpr(fn)(*args),
+                         slot_scan_length=engine.ec.max_slots)
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_prefill_build() -> TraceArtifact:
+    """The paged prefix-resume prefill program at the full chunk width:
+    gather through the page table, the dense engine's OWN pinned
+    per-position scan body (the containment reference is shared —
+    paging may only change the data movement around it), then the
+    range-masked page scatter."""
+    engine = _tiny_serve_paged()
+    fn, args = engine.trace_prefill(_CHUNK, first=False)
+    return TraceArtifact(jaxpr=jax.make_jaxpr(fn)(*args),
+                         body_jaxpr=_prefill_body_reference())
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_prefill_family_build() -> TraceArtifact:
+    """Paged prefill keeps the SAME O(#buckets) program family: the
+    page table and reserved-page count are traced operands, so page
+    placement (and prefix-resume offsets) can never mint programs."""
+    from repro.serve.engine import (
+        prefill_program_bound,
+        prefill_program_family,
+    )
+
+    return TraceArtifact(
+        program_keys=prefill_program_family(_MAX_LEN, _CHUNK,
+                                            needs_begin=False),
+        program_bound=prefill_program_bound(_CHUNK, needs_begin=False))
+
+
+@functools.lru_cache(maxsize=None)
 def _prefill_flash_traces() -> Dict[int, Any]:
     """width -> jaxpr of the flash-mode bucket program."""
     engine = _tiny_serve_flash()
@@ -510,6 +570,19 @@ for _t in (
            tags=("program-count",),
            doc="flash-mode prefill program family — the parallel body "
                "keeps the same O(#buckets) bound"),
+    Target(id="serve.paged_decode_tick", build=_paged_decode_tick_build,
+           tags=("serve", "decode"),
+           doc="paged decode tick: page-table gather/scatter around the "
+               "pinned decode body, cache pool as the slot-scan carry"),
+    Target(id="serve.paged_prefill.w4", build=_paged_prefill_build,
+           tags=("serve", "prefill", "shared-block"),
+           doc="paged prefix-resume prefill program (table + reserved-"
+               "count operands) — must embed the dense engine's pinned "
+               "per-position body verbatim"),
+    Target(id="serve.paged_prefill_buckets", build=_paged_prefill_family_build,
+           tags=("program-count",),
+           doc="paged prefill program family — traced page tables keep "
+               "placement out of the program key, same O(#buckets) bound"),
 ):
     register(_t)
 

@@ -60,6 +60,7 @@ TRAIN_RULES = Rules("train", {
     "kv_lora": None,
     "xl_inner": "model",
     "kv_seq": None,
+    "kv_ring": None,
     "frames": None,
 })
 
@@ -82,6 +83,7 @@ SERVE_RULES = Rules("serve", {
     "kv_lora": None,
     "xl_inner": "model",
     "kv_seq": "model",         # flash-decoding: shard KV positions
+    "kv_ring": "model",        # ring windows shard like KV positions
     "frames": None,
 })
 

@@ -37,6 +37,16 @@ bitwise identical however the trace interleaves it with other traffic.
 ``--scheme`` picks any registered compensation scheme (naive / kahan /
 pairwise / dot2 / plugins) — the launcher builds ONE
 ``repro.kernels.Policy`` and hands it to ``EngineConfig.policy``.
+
+``--kv-layout paged`` re-homes the pageable KV leaves into a fixed page
+pool addressed through per-request page tables (``--page-size`` /
+``--num-pages`` size it; live KV memory then scales with live tokens),
+and ``--prefix-cache`` keeps finished prompts' pages in a radix prefix
+tree so shared prompt prefixes admit by reference. Both are
+bitwise-neutral: the dense layout is the oracle and every token and
+telemetry value matches it exactly. With the paged layout the per-step
+log line carries the pool counters (pages in use / free, prefix-hit
+tokens, admission stalls on page exhaustion).
 """
 
 import argparse
@@ -119,6 +129,26 @@ def main():
                          "scales with chunk width; families whose "
                          "recurrence forces per-position stepping fall "
                          "back to scan). Validated at the parse boundary")
+    ap.add_argument("--kv-layout", default="dense",
+                    help="KV cache layout: 'dense' (fixed max_len row "
+                         "per slot) or 'paged' (fixed page pool + traced "
+                         "per-request page tables; live KV memory scales "
+                         "with live tokens, bitwise-identical output). "
+                         "Validated at the parse boundary")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="positions per KV page (power of two; max_len "
+                         "is rounded up to a multiple). Paged layout only")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool capacity; 0 -> dense parity "
+                         "(max_slots * max_len / page_size). A smaller "
+                         "pool admits by page availability (FIFO stalls "
+                         "on exhaustion). Paged layout only")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="keep finished prompts' full pages in a "
+                         "refcounted radix tree: requests sharing a "
+                         "prompt prefix admit by reference and resume "
+                         "prefill at the shared boundary (requires "
+                         "--kv-layout paged)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="prompt-content RNG seed")
@@ -144,6 +174,14 @@ def main():
         raise ValueError(
             f"--prefill-mode must be 'scan' or 'flash', "
             f"got {args.prefill_mode!r}")
+    if args.kv_layout not in ("dense", "paged"):
+        raise ValueError(
+            f"--kv-layout must be 'dense' or 'paged', "
+            f"got {args.kv_layout!r}")
+    if args.prefix_cache and args.kv_layout != "paged":
+        raise ValueError(
+            "--prefix-cache requires --kv-layout paged (prefix sharing "
+            "is page-granular)")
 
     if args.trace:
         cells = parse_trace(args.trace, args.temperature)
@@ -155,6 +193,10 @@ def main():
                     compute_dtype=args.compute_dtype)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     max_len = args.max_len or max(p + n for _, p, n, _ in cells)
+    if args.kv_layout == "paged" and max_len % args.page_size:
+        # EngineConfig requires max_len % page_size == 0; a fitted
+        # max_len just rounds up to the next page boundary
+        max_len += args.page_size - max_len % args.page_size
 
     rng = np.random.default_rng(args.seed)
     requests, arrivals = [], []
@@ -180,24 +222,49 @@ def main():
                           track_stats=args.stats, policy=policy,
                           prefill_chunk=args.prefill_chunk or None,
                           prefill_budget=args.prefill_budget or None,
-                          prefill_mode=args.prefill_mode))
+                          prefill_mode=args.prefill_mode,
+                          kv_layout=args.kv_layout,
+                          page_size=args.page_size,
+                          num_pages=args.num_pages or None,
+                          prefix_cache=args.prefix_cache))
+    if args.kv_layout == "paged" and engine.kv_layout == "dense":
+        print(f"# kv-layout 'paged' requested but family {cfg.family!r} "
+              f"has no pageable KV leaf (recurrent/ring state only) — "
+              f"running the dense layout")
     if engine.prefill_body != args.prefill_mode:
         print(f"# prefill-mode {args.prefill_mode!r} requested but family "
               f"{cfg.family!r} runs the {engine.prefill_body!r} body "
               f"(per-position fallback — recurrent state or unsupported "
               f"config)")
+    paged = engine.kv_layout == "paged"
     for t, events in engine.stream(requests, arrivals):
         chunks = " ".join(f"r{rid}+{w}/{body}"
                           for rid, w, body in engine.last_chunks)
         emitted = ", ".join(
             f"r{e.request_id}:{e.token}{'*' if e.done else ''}"
             for e in events)
+        pages = ""
+        if paged:
+            st = engine.page_stats()
+            pages = (f" pages={st['pages_in_use']}/{st['num_pages']}"
+                     f" stalls={st['page_stalls']}")
+            if args.prefix_cache:
+                pages += (f" prefix-hit={st['prefix_hit_tokens']}tok"
+                          f" cached={st['prefix_cached_pages']}pg")
         print(f"# step {t:3d} occupancy={engine.scheduler.occupancy} "
               f"prefilling={len(engine.scheduler.prefilling)} "
-              f"queued={engine.scheduler.queued}"
+              f"queued={engine.scheduler.queued}{pages}"
               f"{'  chunks: ' + chunks if chunks else ''}  {emitted}")
     print(f"# compiled prefill programs (width, runs_setup): "
           f"{list(engine.prefill_programs)} body={engine.prefill_body}")
+    if paged:
+        st = engine.page_stats()
+        print(f"# kv-layout=paged page_size={args.page_size} "
+              f"pool={st['num_pages']} free={st['free_pages']} "
+              f"prefix_pages={st['prefix_pages']} "
+              f"prefix_hit_tokens={st['prefix_hit_tokens']} "
+              f"page_stalls={st['page_stalls']} "
+              f"kv_bytes_in_use={st['kv_bytes_in_use']}")
 
     for rid, h in sorted(engine.handles.items()):
         arrival, plen, new, temp = cells[rid]

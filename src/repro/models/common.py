@@ -86,6 +86,52 @@ def cache_batch_axes(cache_specs: Params) -> Params:
                         is_leaf=lambda s: isinstance(s, P))
 
 
+def cache_page_axes(cache: Any, cache_specs: Params, max_len: int) -> Any:
+    """Per-leaf index of the PAGEABLE sequence axis (-1 = dense per-slot).
+
+    The page-aware counterpart of :func:`cache_batch_axes`: a cache leaf
+    is pageable — its positions may live scattered across a fixed-size
+    page pool (``repro.serve.paging``) — exactly when its spec names a
+    ``"kv_seq"`` axis and the leaf allocates the full ``max_len``
+    positions along it. ``"kv_seq"`` is reserved for POSITION-ADDRESSED
+    KV history (decode writes position ``pos`` at index ``pos``), which
+    is what makes page-granular gather/scatter pure data movement.
+
+    Everything else stays dense per-slot, and the spec axis name IS the
+    documented ``pageable=False`` flag:
+
+    * ring-buffer window caches mark their length axis ``"kv_ring"``
+      (see ``models.hybrid``) — their addressing is modular
+      (``pos % window``), so a page does not correspond to a contiguous
+      position range;
+    * recurrent SSM / xLSTM state and one-shot cross-attention K/V
+      (``encdec``'s ``xk``/``xv``) carry no ``"kv_seq"`` axis at all.
+
+    Defensive depth: a ``"kv_seq"`` leaf allocated shorter than
+    ``max_len`` (a ring buffer that kept the wrong name) fails fast
+    here, at engine construction — never inside a trace.
+    """
+    def one(leaf, sp: P) -> int:
+        for i, name in enumerate(sp):
+            if name == "kv_seq" or (isinstance(name, tuple)
+                                    and "kv_seq" in name):
+                if leaf.shape[i] != max_len:
+                    raise ValueError(
+                        f"cache leaf {leaf.shape} marks axis {i} as "
+                        f"'kv_seq' but allocates {leaf.shape[i]} != "
+                        f"max_len={max_len} positions — ring-buffer "
+                        f"caches must use the 'kv_ring' axis name "
+                        f"(the pageable=False spec flag)")
+                return i
+        return -1
+
+    spec_leaf = lambda s: isinstance(s, P)  # noqa: E731
+    return jax.tree.map(
+        one, cache,
+        jax.tree.unflatten(jax.tree.structure(cache),
+                           jax.tree.leaves(cache_specs, is_leaf=spec_leaf)))
+
+
 # ---------------------------------------------------------------------------
 # Chunked (resume-from-offset) prefill
 # ---------------------------------------------------------------------------

@@ -183,7 +183,14 @@ class HymbaLM:
             s_alloc = window if window > 0 else max_len
             kv = (jnp.zeros((batch_size, s_alloc, cfg.n_kv_heads,
                              cfg.head_dim), cd),) * 2
-            kv_s = (P("batch", "kv_seq", kvspec, None),) * 2
+            # "kv_ring" is the documented pageable=False spec flag
+            # (models.common.cache_page_axes): a window buffer is
+            # MODULAR-addressed (slot = pos % window), so its rows are
+            # not a contiguous position range and must stay dense
+            # per-slot under the paged KV layout. Global-attention
+            # segments keep "kv_seq" (position-addressed, pageable).
+            axis = "kv_ring" if window > 0 else "kv_seq"
+            kv_s = (P("batch", axis, kvspec, None),) * 2
             ssm = (jnp.zeros((batch_size, d_in, cfg.ssm.d_state),
                              jnp.float32),
                    jnp.zeros((batch_size, cfg.ssm.d_conv - 1, d_in), cd))

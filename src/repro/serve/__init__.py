@@ -8,13 +8,25 @@
                   determinism (see the engine docstring for the contract
                   and the mechanisms that carry it).
   scheduler.py  — Request / SamplingParams / RequestHandle, the QUEUED →
-                  PREFILLING → RUNNING → FINISHED lifecycle, and the
-                  deterministic FIFO + lowest-free-slot scheduler.
-  slots.py      — ``SlotKVCache``: the fixed-width slot cache, with
-                  per-leaf request axes derived from the models' cache
-                  specs (``repro.models.cache_batch_axes``); pure
+                  [ALLOCATING →] PREFILLING → RUNNING → FINISHED
+                  lifecycle, and the deterministic FIFO + lowest-free-
+                  slot scheduler.
+  slots.py      — ``SlotKVCache``: the fixed-width DENSE slot cache (the
+                  default layout AND the paged layout's bitwise oracle),
+                  with per-leaf request axes derived from the models'
+                  cache specs (``repro.models.cache_batch_axes``); pure
                   gather_row/scatter_row helpers the prefill-chunk
                   programs compose in-trace.
+  paging.py     — ``PagedKVCache`` + ``PageAllocator``
+                  (``EngineConfig.kv_layout="paged"``): pageable KV
+                  leaves re-homed into a fixed page pool, addressed per
+                  request through traced page tables — live KV memory
+                  scales with live tokens, one compiled program per
+                  placement, bitwise-equal to the dense oracle.
+  prefix.py     — ``RadixPrefixTree`` (``EngineConfig.prefix_cache``):
+                  page-granular refcounted prompt-prefix index, so
+                  shared prefixes admit by reference and resume prefill
+                  at the shared boundary.
 """
 
 from repro.serve.engine import (  # noqa: F401
@@ -22,6 +34,11 @@ from repro.serve.engine import (  # noqa: F401
     InferenceEngine,
     TokenEvent,
 )
+from repro.serve.paging import (  # noqa: F401
+    PageAllocator,
+    PagedKVCache,
+)
+from repro.serve.prefix import RadixPrefixTree  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Request,
     RequestHandle,

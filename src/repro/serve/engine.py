@@ -104,6 +104,29 @@ window KV + SSM state) and xLSTM (recurrent cell state) — and configs
 the parallel body cannot serve (MLA, MoE capacity routing, sliding
 window) fall back to the scan body; ``engine.prefill_body`` reports
 the resolved choice.
+
+PAGED KV LAYOUT (``EngineConfig.kv_layout = "paged"``): the dense
+``SlotKVCache`` pins ``max_slots * max_len`` positions per KV leaf
+whether or not anyone lives there. The paged layout re-homes every
+PAGEABLE leaf (position-addressed KV history — ``repro.serve.paging``)
+into a fixed pool of ``num_pages`` pages of ``page_size`` positions,
+addressed per request through a traced page-table operand, so live KV
+memory scales with live tokens and one compiled program serves every
+page placement. THE DENSE LAYOUT REMAINS THE DEFAULT AND THE BITWISE
+ORACLE: a request's tokens and telemetry are bitwise identical under
+either layout, and identical whether its pages are contiguous or
+scattered — carried by pinning ``decode_one`` and the prefill chunk
+body with ``optimization_barrier`` in BOTH layouts (identical pinned
+interiors; only the exact-data-movement gather/scatter differs) plus
+the zero-fill gather / zero-reset-on-free pristine-bits guarantee.
+Page reservation is whole-request at admission (never in a trace,
+never mid-decode; exhaustion blocks admission FIFO — the ALLOCATING
+state), and ``EngineConfig.prefix_cache`` adds a refcounted radix tree
+(``repro.serve.prefix``) over finished prompts so shared prefixes
+admit by reference and resume prefill at the shared page boundary.
+Recurrent-only families (SSM/xLSTM, all-window hybrids) have no
+pageable leaf and fall back to dense; ``engine.kv_layout`` reports the
+resolved layout, ``engine.page_stats()`` the pool accounting.
 """
 
 from __future__ import annotations
@@ -121,7 +144,18 @@ from repro.configs.base import ArchConfig
 from repro.kernels import schemes as _schemes
 from repro.kernels.schemes import Policy, use_policy
 from repro.models import build_model
+from repro.serve.paging import (
+    PageAllocator,
+    PagedKVCache,
+    paged_gather_row,
+    paged_scatter_decode,
+    paged_scatter_row,
+    pages_for,
+)
+from repro.serve.prefix import PrefixNode, RadixPrefixTree
 from repro.serve.scheduler import (
+    ALLOCATING,
+    QUEUED,
     Request,
     RequestHandle,
     SamplingParams,
@@ -177,6 +211,29 @@ class EngineConfig:
                    MoE capacity routing, sliding window) — fall back to
                    the scan body under "flash"; see
                    ``InferenceEngine.prefill_body``
+    kv_layout      how pageable cache leaves are stored: "dense"
+                   (default AND the bitwise oracle — ``SlotKVCache``
+                   rows of max_slots x max_len) or "paged" (a fixed
+                   page pool with per-request page tables,
+                   ``repro.serve.paging`` — live memory scales with
+                   live tokens). Families with no pageable leaf
+                   (SSM/xLSTM recurrence, all-window hybrids) fall back
+                   to dense; ``InferenceEngine.kv_layout`` reports the
+                   resolved layout. Requires slot_loop="scan" (the
+                   paged tick threads the pool through the slot scan)
+    page_size      positions per page (power of two; max_len must be a
+                   multiple). Smaller pages track live tokens tighter
+                   and share prefixes at finer grain; larger pages cut
+                   table length and gather/scatter op count
+    num_pages      pool capacity in pages; None = dense parity
+                   (max_slots * max_len / page_size). Admission blocks
+                   (deterministic FIFO) when the pool runs short;
+                   requests that could never fit fail fast at submit
+    prefix_cache   keep finished requests' full prompt pages in a
+                   refcounted radix tree (``repro.serve.prefix``) so a
+                   request with a resident prompt prefix admits by
+                   reference and resumes prefill at the shared offset.
+                   Paged layout only
     """
 
     max_slots: int = 4
@@ -189,6 +246,10 @@ class EngineConfig:
     prefill_budget: Optional[int] = None
     max_finished: Optional[int] = None
     prefill_mode: str = "scan"
+    kv_layout: str = "dense"
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    prefix_cache: bool = False
 
     def __post_init__(self):
         if self.slot_loop not in ("scan", "vmap"):
@@ -198,8 +259,34 @@ class EngineConfig:
             raise ValueError(
                 f"prefill_mode must be 'scan' or 'flash', "
                 f"got {self.prefill_mode!r}")
+        if self.kv_layout not in ("dense", "paged"):
+            raise ValueError(
+                f"kv_layout must be 'dense' or 'paged', "
+                f"got {self.kv_layout!r}")
         if self.max_len < 1:
             raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.kv_layout == "paged":
+            ps = self.page_size
+            if ps < 1 or (ps & (ps - 1)):
+                raise ValueError(
+                    f"page_size must be a power of two >= 1, got {ps}")
+            if self.max_len % ps:
+                raise ValueError(
+                    f"max_len={self.max_len} must be a multiple of "
+                    f"page_size={ps}")
+            if self.num_pages is not None and self.num_pages < 1:
+                raise ValueError(
+                    f"num_pages must be >= 1 (or None for dense parity), "
+                    f"got {self.num_pages}")
+            if self.slot_loop == "vmap":
+                raise ValueError(
+                    "kv_layout='paged' requires slot_loop='scan' — the "
+                    "paged decode tick threads the page pool through the "
+                    "slot scan as a carry")
+        if self.prefix_cache and self.kv_layout != "paged":
+            raise ValueError(
+                "prefix_cache=True requires kv_layout='paged' (prefix "
+                "sharing is page-granular)")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1 (or None for one-shot "
@@ -316,7 +403,7 @@ class _ServePrograms:
 
 
 def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
-                  batch_axes) -> _ServePrograms:
+                  batch_axes, page_axes=None) -> _ServePrograms:
     """Build (or fetch) the engine's jitted callables.
 
     Cached ON the model object keyed by the engine signature, so several
@@ -324,6 +411,14 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
     reference engine next to the serving engine in the determinism
     tests) share compiled code — widths shared between a chunked and a
     one-shot engine resolve to the SAME program.
+
+    ``page_axes`` non-None selects the PAGED program family (the
+    engine's RESOLVED layout, after the no-pageable-leaf fallback): the
+    tick and the prefill chunk programs take each request's page table
+    as a traced operand and assemble/write its logical row through
+    ``repro.serve.paging`` — one compiled program for ANY page
+    placement. The compute between gather and scatter is the same
+    barrier-pinned ``decode_one`` / chunk body the dense programs run.
     """
     # Resolve the chunk body ONCE: "flash" engines over a family whose
     # recurrence forces per-position stepping (hybrid ring/SSM, xLSTM —
@@ -337,8 +432,9 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
             and getattr(model, "parallel_prefill_ok", False)
             and hasattr(model, "prefill_chunk_parallel")):
         prefill_body = "flash"
+    layout = "dense" if page_axes is None else ("paged", ec.page_size)
     key = ("serve", ec.max_slots, ec.max_len, ec.track_stats,
-           ec.sample_seed, ec.slot_loop, policy, prefill_body)
+           ec.sample_seed, ec.slot_loop, policy, prefill_body, layout)
     cache = model.__dict__.setdefault("_serve_compiled", {})
     if key in cache:
         return cache[key]
@@ -369,7 +465,20 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
         """ONE request's decode step — the unit mapped over slots.
         Re-inserts the request axis (size 1) per cache leaf, runs the
         model's own decode_step, samples with the request's folded key.
+        Entry/exit are ``optimization_barrier``-pinned: the dense tick
+        feeds rows via moveaxis slicing, the paged tick via page-table
+        gathers, and the pin keeps XLA from fusing either data-movement
+        flavour INTO the arithmetic — both layouts execute this
+        identical interior, which is the paged-vs-dense half of the
+        serving bitwise contract (module docstring). (The "vmap" slot
+        loop skips the pin — optimization_barrier has no batching rule,
+        and that loop opts out of the bitwise contract anyway.)
         """
+        pin = ec.slot_loop != "vmap"
+        if pin:
+            cache_row, token, pos, seed, eidx, temp = (
+                jax.lax.optimization_barrier(
+                    (cache_row, token, pos, seed, eidx, temp)))
         cache1 = jax.tree.map(lambda x, a: jnp.expand_dims(x, a),
                               cache_row, batch_axes)
         logits, new_cache = model.decode_step(params, cache1, token[None],
@@ -378,9 +487,54 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
                                new_cache, batch_axes)
         k = jax.random.fold_in(jax.random.fold_in(base_key, seed), eidx)
         tok = sample_row(logits[0], k, temp)
-        return logits[0], new_row, tok
+        out = (logits[0], new_row, tok)
+        return jax.lax.optimization_barrier(out) if pin else out
 
-    if ec.slot_loop == "vmap":
+    if page_axes is not None:
+        # ------------------------------------------------------ paged tick
+        # The cache pytree (dense rows + page pools) is the scan CARRY;
+        # per-slot xs carry the request's page table and reserved-page
+        # count. Each step gathers the slot's logical row through its
+        # table (dense leaves slice at the slot), runs the SAME pinned
+        # decode_one, selects old bits back for dead slots IN-BODY (the
+        # dense tick's post-scan keep, moved inside the carry), and
+        # scatters dense leaves at the slot plus exactly ONE pool page —
+        # the one containing ``pos`` (dead slots write the NULL page).
+        @functools.partial(jax.jit, donate_argnums=tuple(
+            1 + i for i in _donate()))
+        def tick(params, cache, tokens, pos, seeds, eidx, temps, live,
+                 tables, nres):
+            with use_policy(policy):
+                slots_iota = jnp.arange(ec.max_slots, dtype=jnp.int32)
+
+                def body(carry, xs):
+                    token, p, seed, ei, temp, lv, table, nr, slot = xs
+                    row1 = paged_gather_row(carry, batch_axes, page_axes,
+                                            slot, table, nr)
+                    row = jax.tree.map(lambda x, a: jnp.squeeze(x, a),
+                                       row1, batch_axes)
+                    lg, new_row, tok = decode_one(params, row, token, p,
+                                                  seed, ei, temp)
+                    new1 = jax.tree.map(lambda x, a: jnp.expand_dims(x, a),
+                                        new_row, batch_axes)
+                    # dead slots keep their old bits — exact select, and
+                    # their pool write is redirected to the NULL page
+                    new1 = jax.tree.map(lambda n, o: jnp.where(lv, n, o),
+                                        new1, row1)
+                    carry = paged_scatter_decode(
+                        carry, new1, batch_axes, page_axes, slot, table,
+                        p, lv)
+                    return carry, (lg, tok)
+
+                new_cache, (logits, next_tok) = jax.lax.scan(
+                    body, cache, (tokens, pos, seeds, eidx, temps, live,
+                                  tables, nres, slots_iota))
+                norms = (_norms(logits) if ec.track_stats
+                         else jnp.zeros((ec.max_slots,), jnp.float32))
+            return new_cache, next_tok, norms
+
+        decode_slots = None
+    elif ec.slot_loop == "vmap":
         decode_slots = jax.vmap(decode_one,
                                 in_axes=(None, batch_axes, 0, 0, 0, 0, 0),
                                 out_axes=(0, batch_axes, 0))
@@ -404,59 +558,104 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
                                      new_front, batch_axes)
             return logits, new_cache, toks
 
-    @functools.partial(jax.jit, donate_argnums=tuple(
-        1 + i for i in _donate()))
-    def tick(params, cache, tokens, pos, seeds, eidx, temps, live):
-        with use_policy(policy):
-            logits, new_cache, next_tok = decode_slots(
-                params, cache, tokens, pos, seeds, eidx, temps)
-            # ONLY running slots advance: free and PREFILLING rows keep
-            # their bits (a partially prefilled row must not be stomped
-            # by the garbage compute of its own tick lane). The select is
-            # exact and applied OUTSIDE the scanned body, so live rows'
-            # bits are untouched.
-            def keep(new, old, a):
-                shape = [1] * new.ndim
-                shape[a] = live.shape[0]
-                return jnp.where(live.reshape(shape), new, old)
+    if decode_slots is not None:
+        @functools.partial(jax.jit, donate_argnums=tuple(
+            1 + i for i in _donate()))
+        def tick(params, cache, tokens, pos, seeds, eidx, temps, live):
+            with use_policy(policy):
+                logits, new_cache, next_tok = decode_slots(
+                    params, cache, tokens, pos, seeds, eidx, temps)
+                # ONLY running slots advance: free and PREFILLING rows
+                # keep their bits (a partially prefilled row must not be
+                # stomped by the garbage compute of its own tick lane).
+                # The select is exact and applied OUTSIDE the scanned
+                # body, so live rows' bits are untouched.
+                def keep(new, old, a):
+                    shape = [1] * new.ndim
+                    shape[a] = live.shape[0]
+                    return jnp.where(live.reshape(shape), new, old)
 
-            new_cache = jax.tree.map(keep, new_cache, cache, batch_axes)
-            norms = (_norms(logits) if ec.track_stats
-                     else jnp.zeros((ec.max_slots,), jnp.float32))
-        return new_cache, next_tok, norms
+                new_cache = jax.tree.map(keep, new_cache, cache,
+                                         batch_axes)
+                norms = (_norms(logits) if ec.track_stats
+                         else jnp.zeros((ec.max_slots,), jnp.float32))
+            return new_cache, next_tok, norms
 
     begin = getattr(model, "prefill_begin", None)
     chunk_fn = (model.prefill_chunk_parallel if prefill_body == "flash"
                 else model.prefill_chunk)
 
+    def _advance(params, batch, row, offset, nvalid, first):
+        """The shared chunk interior: optional pinned ``prefill_begin``
+        plus the resolved chunk body, with the body boundary
+        ``optimization_barrier``-pinned on BOTH sides — the dense
+        program slices the row out of its slot, the paged program
+        assembles it through a page table, and the pin keeps either
+        layout's data movement out of the chunk arithmetic (the
+        paged-vs-dense bitwise contract, prefill half)."""
+        if first and begin is not None:
+            # pinned like the scan body: the setup's bits must not
+            # depend on which width the first chunk has
+            row = jax.lax.optimization_barrier(begin(params, batch, row))
+        row = jax.lax.optimization_barrier(row)
+        logits, row = chunk_fn(params, batch, row, offset, nvalid)
+        return jax.lax.optimization_barrier((logits, row))
+
+    def _finish_chunk(logits, seed, temp):
+        """Emit-0 sampling + telemetry from the last-valid-position
+        logits (used only when this was the request's final chunk)."""
+        k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
+                               jnp.int32(0))
+        tok = sample_row(logits[0], k, temp)
+        norm = (_norms(logits)[0] if ec.track_stats
+                else jnp.float32(0.0))
+        return tok, norm
+
     def prefill_factory(width: int, first: bool):
         """One jitted prefill-chunk program for a static chunk width.
 
-        Gathers the request's batch-1 row from its slot, (optionally)
-        runs the family's one-time ``prefill_begin`` setup, advances the
-        row by the chunk through the resolved body — the per-position
-        scan, or (``prefill_mode="flash"``) the family's parallel
-        multi-token pass — scatters the row back, and samples emit 0 +
-        its telemetry norm from the last-valid-position logits (the
-        engine uses them only when this was the request's final chunk)."""
+        Gathers the request's batch-1 row from its slot (dense: sliced;
+        paged: assembled through its page table), (optionally) runs the
+        family's one-time ``prefill_begin`` setup, advances the row by
+        the chunk through the resolved body — the per-position scan, or
+        (``prefill_mode="flash"``) the family's parallel multi-token
+        pass — scatters the row back, and samples emit 0 + its
+        telemetry norm from the last-valid-position logits (the engine
+        uses them only when this was the request's final chunk)."""
+        if page_axes is not None:
+            pgsz = ec.page_size
+
+            @functools.partial(jax.jit, donate_argnums=tuple(
+                1 + i for i in _donate()))
+            def prefill(params, cache, slot, batch, offset, nvalid, seed,
+                        temp, table, nres):
+                with use_policy(policy):
+                    row = paged_gather_row(cache, batch_axes, page_axes,
+                                           slot, table, nres)
+                    logits, row = _advance(params, batch, row, offset,
+                                           nvalid, first)
+                    # write back ONLY the chunk's pages: everything below
+                    # ``offset`` (shared prefix pages included) is
+                    # redirected to the NULL page — strict copy-on-write
+                    first_pg = offset // pgsz
+                    end_pg = (offset + nvalid - 1) // pgsz + 1
+                    new_cache = paged_scatter_row(
+                        cache, row, batch_axes, page_axes, slot, table,
+                        first_pg, end_pg)
+                    tok, norm = _finish_chunk(logits, seed, temp)
+                return new_cache, tok, norm
+
+            return prefill
 
         @functools.partial(jax.jit, donate_argnums=tuple(
             1 + i for i in _donate()))
         def prefill(params, cache, slot, batch, offset, nvalid, seed, temp):
             with use_policy(policy):
                 row = gather_row(cache, batch_axes, slot)
-                if first and begin is not None:
-                    # pinned like the scan body: the setup's bits must
-                    # not depend on which width the first chunk has
-                    row = jax.lax.optimization_barrier(
-                        begin(params, batch, row))
-                logits, row = chunk_fn(params, batch, row, offset, nvalid)
+                logits, row = _advance(params, batch, row, offset, nvalid,
+                                       first)
                 new_cache = scatter_row(cache, row, batch_axes, slot)
-                k = jax.random.fold_in(jax.random.fold_in(base_key, seed),
-                                       jnp.int32(0))
-                tok = sample_row(logits[0], k, temp)
-                norm = (_norms(logits)[0] if ec.track_stats
-                        else jnp.float32(0.0))
+                tok, norm = _finish_chunk(logits, seed, temp)
             return new_cache, tok, norm
 
         return prefill
@@ -464,6 +663,29 @@ def _compiled_fns(model, cfg: ArchConfig, ec: EngineConfig, policy: Policy,
     fns = _ServePrograms(tick, prefill_factory, prefill_body)
     cache[key] = fns
     return fns
+
+
+@dataclasses.dataclass
+class _PageLease:
+    """One admitted request's page reservation (paged layout only).
+
+    table    [max_pages] i32 page table — shared prefix pages first,
+             then the request's own pages, NULL (0) beyond ``n_pages``
+    n_pages  reserved pages total (every page the request can touch —
+             fixed at admission, so decode never allocates)
+    shared   acquired prefix-tree path (refs held until finish)
+    own      engine-owned pages (freed — or adopted by the prefix tree —
+             at finish)
+    resume   prefill resume offset: positions [0, resume) came in by
+             reference (+ at most one copy-on-write page) and are never
+             re-prefilled
+    """
+
+    table: np.ndarray
+    n_pages: int
+    shared: List[PrefixNode]
+    own: List[int]
+    resume: int
 
 
 class InferenceEngine:
@@ -486,11 +708,35 @@ class InferenceEngine:
         if params is None:
             params, _ = self.model.init(jax.random.key(seed))  # contract: allow-no-raw-prngkey(engine-owned init root from the config seed — the serving boundary)
         self.params = params
-        self.slots = SlotKVCache(self.model, ec.max_slots, ec.max_len)
+        # resolve the KV layout: "paged" needs at least one pageable
+        # leaf — recurrent-only families (SSM/xLSTM, all-window hybrids)
+        # fall back to dense; ``engine.kv_layout`` reports the result
+        # (mirroring the flash -> scan prefill_body fallback).
+        self.pages: Optional[PageAllocator] = None
+        self.prefix: Optional[RadixPrefixTree] = None
+        self.num_pages = 0
+        if (ec.kv_layout == "paged"
+                and PagedKVCache.pageable(self.model, ec.max_len)):
+            self.num_pages = (
+                ec.num_pages if ec.num_pages is not None
+                else ec.max_slots * ec.max_len // ec.page_size)
+            self.slots = PagedKVCache(self.model, ec.max_slots, ec.max_len,
+                                      ec.page_size, self.num_pages)
+            self.pages = PageAllocator(self.num_pages)
+            if ec.prefix_cache:
+                self.prefix = RadixPrefixTree(ec.page_size)
+        else:
+            self.slots = SlotKVCache(self.model, ec.max_slots, ec.max_len)
         self.scheduler = SlotScheduler(ec.max_slots)
         self._fns = _compiled_fns(
-            self.model, cfg, ec, self.policy, self.slots.batch_axes)
+            self.model, cfg, ec, self.policy, self.slots.batch_axes,
+            getattr(self.slots, "page_axes", None))
         self._needs_begin = getattr(self.model, "prefill_begin", None) is not None
+        # paged bookkeeping: request_id -> its page lease, plus the
+        # launcher-facing counters ``page_stats()`` surfaces
+        self._leases: Dict[int, _PageLease] = {}
+        self.prefix_hit_tokens = 0
+        self.page_stalls = 0
         # (width, runs_begin) of every prefill program THIS engine's
         # traffic has needed (the jitted programs themselves are shared
         # model-wide, so a solo-replay engine reuses the loaded engine's)
@@ -533,6 +779,18 @@ class InferenceEngine:
                 f"request {rid}: prompt_len={prompt_len} + "
                 f"max_new_tokens={request.sampling.max_new_tokens} exceeds "
                 f"the engine's max_len={self.ec.max_len}")
+        if self.pages is not None:
+            need = pages_for(
+                prompt_len + request.sampling.max_new_tokens - 1,
+                self.ec.page_size)
+            if need > self.num_pages:
+                # fail fast at the API boundary: this request could never
+                # be admitted even with the whole pool free — waiting in
+                # the FIFO queue would starve everything behind it forever
+                raise ValueError(
+                    f"request {rid}: needs {need} pages but the pool has "
+                    f"only {self.num_pages} — raise num_pages or shrink "
+                    f"the request")
         handle = RequestHandle(request_id=rid, request=request,
                                prompt_len=prompt_len)
         self.handles[rid] = handle
@@ -574,6 +832,13 @@ class InferenceEngine:
         spent = 0
         while True:
             while sch.can_admit():
+                if self.pages is not None and not self._reserve_pages(
+                        sch.peek()):
+                    # page exhaustion: the head blocks IN THE QUEUE
+                    # (strict FIFO — nothing jumps a starved head) until
+                    # finishing requests release pages
+                    self.page_stalls += 1
+                    break
                 sch.admit_next()
             if budget is not None and spent >= budget:
                 break
@@ -602,10 +867,19 @@ class InferenceEngine:
                 eidx[slot] = h.emitted
                 temps[slot] = h.request.sampling.temperature
                 live[slot] = True
+            extra = ()
+            if self.pages is not None:
+                tables = np.zeros((b, self.slots.max_pages), np.int32)
+                nres = np.zeros((b,), np.int32)
+                for slot, h in running.items():
+                    lease = self._leases[h.request_id]
+                    tables[slot] = lease.table
+                    nres[slot] = lease.n_pages
+                extra = (jnp.asarray(tables), jnp.asarray(nres))
             new_cache, next_tok, norms = self._fns.tick(
                 self.params, self.slots.cache, jnp.asarray(tokens),
                 jnp.asarray(pos), jnp.asarray(seeds), jnp.asarray(eidx),
-                jnp.asarray(temps), jnp.asarray(live))
+                jnp.asarray(temps), jnp.asarray(live), *extra)
             self.slots.cache = new_cache
             toks = np.asarray(next_tok)
             norms = np.asarray(norms)
@@ -624,7 +898,17 @@ class InferenceEngine:
         offset = h.prefill_pos
         width, nvalid = _next_chunk(h.prompt_len, offset,
                                     self.ec.prefill_chunk)
-        first = offset == 0 and self._needs_begin
+        extra = ()
+        resume = 0
+        if self.pages is not None:
+            lease = self._leases[h.request_id]
+            resume = lease.resume
+            extra = (jnp.asarray(lease.table),
+                     jnp.asarray(lease.n_pages, jnp.int32))
+        # a prefix-resumed request's FIRST chunk is the one at its resume
+        # offset — ``prefill_begin`` (dense, per-slot leaves) must still
+        # run for it
+        first = offset == resume and self._needs_begin
         self._used_prefill.add((width, first))
         self.last_chunks.append((h.request_id, width, self.prefill_body))
         fn = self._fns.prefill(width, first)
@@ -635,7 +919,7 @@ class InferenceEngine:
                               nvalid),
             jnp.asarray(offset, jnp.int32), jnp.asarray(nvalid, jnp.int32),
             jnp.asarray(h.seed, jnp.int32),
-            jnp.asarray(sp.temperature, jnp.float32))
+            jnp.asarray(sp.temperature, jnp.float32), *extra)
         self.slots.cache = new_cache
         h.prefill_pos = offset + nvalid
         if h.prefill_pos == h.prompt_len:
@@ -658,11 +942,178 @@ class InferenceEngine:
         if done:
             slot = self.scheduler.release(h)
             self.slots.reset(slot)      # eviction hook: no stale state
+            if self.pages is not None:
+                self._release_pages(h)
             self._finished.append(h.request_id)
             if self.ec.max_finished is not None:
                 while len(self._finished) > self.ec.max_finished:
                     self.handles.pop(self._finished.popleft(), None)
         events.append(TokenEvent(h.request_id, token, nval, done))
+
+    # ------------------------------------------------------ page admission
+    def _sharable(self, h: RequestHandle) -> bool:
+        """May this request share prompt pages through the prefix tree?
+        Sharing needs cache bits that are a function of the TOKEN PREFIX
+        only: extras-bearing requests (multimodal / encoder inputs feed
+        every cached position) are excluded, as are ``prefill_begin``
+        families (begin-derived state conditions the pageable leaves,
+        and those families take extras anyway), and a flash chunk body
+        without a chunk width has no alignable resume offset."""
+        return (self.prefix is not None and not h.request.extras
+                and not self._needs_begin
+                and (self.prefill_body == "scan"
+                     or self.ec.prefill_chunk is not None))
+
+    def _reserve_pages(self, h: RequestHandle) -> bool:
+        """Reserve EVERY page the queue head can touch (the ALLOCATING
+        admission window); False = pool exhausted even after prefix-
+        cache eviction — the head goes back to QUEUED and admission
+        stalls, strict FIFO. All allocation happens here, on the host:
+        never inside a trace, and never mid-decode.
+
+        With the prefix cache on, the prompt is matched against the
+        radix tree first: matched full pages are taken BY REFERENCE
+        (refcounted, never written — the prefill scatter masks every
+        page below the resume offset to the NULL page), and under the
+        scan chunk body one partially-matching page may be duplicated
+        copy-on-write. The resume offset is capped so at least one
+        prompt position is always re-prefilled (the final chunk's
+        logits emit token 0) and — under the flash body — aligned to
+        both the page size and the chunk width, so a resumed request
+        runs EXACTLY the chunk programs its private prefill would have
+        run from that offset (cross-width flash equality is allclose,
+        not bitwise; alignment keeps shared-vs-private bitwise).
+        """
+        ec = self.ec
+        ps = ec.page_size
+        h.status = ALLOCATING
+        total = pages_for(
+            h.prompt_len + h.request.sampling.max_new_tokens - 1, ps)
+        prompt = [int(t) for t in np.asarray(h.request.prompt)]
+        sharable = self._sharable(h)
+        path: List[PrefixNode] = []
+        resume = 0
+        if sharable:
+            path = self.prefix.match(prompt)
+            r = min(len(path) * ps, h.prompt_len - 1)
+            if self.prefill_body == "flash":
+                c = ec.prefill_chunk
+                r = min(r, c * ((h.prompt_len - 1) // c))
+                align = max(ps, c)
+                r = (r // align) * align
+            else:
+                r = (r // ps) * ps
+            path = path[:r // ps]
+            resume = r
+        shared = len(path)
+        need = total - shared
+        if self.prefix is not None:
+            self.prefix.acquire(path)
+            if self.pages.free_count < need:
+                # reclaim refs-0 cached prefix pages, oldest first (the
+                # path we just acquired is pinned by its refs)
+                freed = self.prefix.evict(need - self.pages.free_count)
+                if freed:
+                    self.slots.reset_pages(freed)  # pristine before reuse
+                    self.pages.free(freed)
+        if self.pages.free_count < need:
+            if self.prefix is not None:
+                self.prefix.release(path)
+            h.status = QUEUED
+            return False
+        own = self.pages.alloc(need)
+        if sharable and self.prefill_body == "scan":
+            # copy-on-write at the first divergent page (scan body only —
+            # flash resume must stay chunk-aligned): duplicate the child
+            # sharing the longest token prefix of the next page into the
+            # request's own first page, then resume AFTER the overlap.
+            # Chosen after eviction, so the donor is still resident.
+            donor, t = self.prefix.partial_child(path, prompt)
+            t = min(t, h.prompt_len - 1 - resume)
+            if donor is not None and t > 0:
+                self.slots.copy_page(donor.page, own[0])
+                resume += t
+        table = np.zeros((self.slots.max_pages,), np.int32)
+        for j, node in enumerate(path):
+            table[j] = node.page
+        table[shared:shared + need] = own
+        self._leases[h.request_id] = _PageLease(
+            table=table, n_pages=total, shared=path, own=own, resume=resume)
+        h.prefill_pos = resume
+        self.prefix_hit_tokens += resume
+        return True
+
+    def _release_pages(self, h: RequestHandle) -> None:
+        """Finish hook (runs right after the slot is released): drop the
+        request's prefix references, offer its full prompt pages to the
+        prefix tree (first insert of a page run wins — the bitwise
+        contract makes any two requests' bits for identical full-page
+        prompt runs identical, so which donor wins is unobservable), and
+        zero-reset + free whatever the tree did not adopt. The leak
+        invariant: after a drained trace, free pages + tree-owned pages
+        == num_pages."""
+        lease = self._leases.pop(h.request_id)
+        own = list(lease.own)
+        if self.prefix is not None:
+            self.prefix.release(lease.shared)
+            if self._sharable(h):
+                ps = self.ec.page_size
+                if self.prefill_body == "flash":
+                    # only positions computed in FULL chunk-width
+                    # programs are donor-eligible under flash (tail
+                    # buckets are width-dependent): insert pages fully
+                    # inside that region
+                    c = self.ec.prefill_chunk
+                    n_ins = (c * ((h.prompt_len - 1) // c)) // ps
+                else:
+                    n_ins = h.prompt_len // ps
+                if n_ins:
+                    prompt = [int(t) for t in np.asarray(h.request.prompt)]
+                    adopted, _ = self.prefix.insert(
+                        prompt, n_ins, lease.table[:n_ins])
+                    if adopted:
+                        taken = set(adopted)
+                        own = [p for p in own if p not in taken]
+        if own:
+            self.slots.reset_pages(own)   # pristine before the free list
+            self.pages.free(own)
+
+    @property
+    def kv_layout(self) -> str:
+        """The RESOLVED cache layout: "paged" only when
+        ``EngineConfig.kv_layout == "paged"`` AND the family has at
+        least one pageable leaf (recurrent-only families fall back to
+        dense — mirroring the flash -> scan ``prefill_body``
+        fallback)."""
+        return "paged" if self.pages is not None else "dense"
+
+    def page_stats(self) -> Dict[str, int]:
+        """Pool / prefix accounting snapshot (paged layout only) — the
+        launcher's per-step log line and the footprint tests read this.
+
+        ``pages_in_use`` counts every non-free page: request-reserved
+        plus tree-owned (shared live + retained cache).
+        ``kv_bytes_in_use`` is that count times the per-page byte
+        footprint across every pool leaf — the live-memory figure that
+        scales with live tokens where the dense layout pins
+        ``max_slots * max_len``."""
+        if self.pages is None:
+            raise RuntimeError(
+                "page_stats: this engine resolved to the dense layout "
+                "(kv_layout='dense', or the family has no pageable leaf)")
+        in_use = self.num_pages - self.pages.free_count
+        return {
+            "num_pages": self.num_pages,
+            "free_pages": self.pages.free_count,
+            "pages_in_use": in_use,
+            "prefix_pages": (self.prefix.total_pages
+                             if self.prefix is not None else 0),
+            "prefix_cached_pages": (self.prefix.cached_pages
+                                    if self.prefix is not None else 0),
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "page_stalls": self.page_stalls,
+            "kv_bytes_in_use": in_use * self.slots.page_bytes,
+        }
 
     # ------------------------------------------------------- handle hygiene
     def pop_finished(self) -> Dict[int, RequestHandle]:
@@ -689,6 +1140,9 @@ class InferenceEngine:
         z = functools.partial(jax.ShapeDtypeStruct, (b,))
         args = (self.params, self.slots.cache, z(jnp.int32), z(jnp.int32),
                 z(jnp.int32), z(jnp.int32), z(jnp.float32), z(jnp.bool_))
+        if self.pages is not None:
+            args += (jax.ShapeDtypeStruct((b, self.slots.max_pages),
+                                          jnp.int32), z(jnp.int32))
         return self._fns.tick, args
 
     def trace_prefill(self, width: int, first: bool = False,
@@ -700,6 +1154,9 @@ class InferenceEngine:
         args = (self.params, self.slots.cache, s((), jnp.int32), batch,
                 s((), jnp.int32), s((), jnp.int32), s((), jnp.int32),
                 s((), jnp.float32))
+        if self.pages is not None:
+            args += (s((self.slots.max_pages,), jnp.int32),
+                     s((), jnp.int32))
         return self._fns.prefill(width, first), args
 
     @property

@@ -11,12 +11,15 @@ separation auditable.
 Admission policy: FIFO over arrival order, lowest free slot first — both
 deterministic, so a replayed trace schedules identically.
 
-Lifecycle: ``QUEUED -> PREFILLING -> RUNNING -> FINISHED``. A request
-occupies its slot from admission (PREFILLING) on, but only joins the
-decode batch once its whole prompt has been prefilled — chunked prefill
-spreads that work over multiple engine steps under the engine's chunk
-budget, so one long prompt can no longer stall every occupied decode
-slot for its full prefill.
+Lifecycle: ``QUEUED -> [ALLOCATING ->] PREFILLING -> RUNNING ->
+FINISHED``. A request occupies its slot from admission (PREFILLING) on,
+but only joins the decode batch once its whole prompt has been
+prefilled — chunked prefill spreads that work over multiple engine
+steps under the engine's chunk budget, so one long prompt can no longer
+stall every occupied decode slot for its full prefill. Under the paged
+KV layout the queue head passes through ALLOCATING first (prefix match
++ page reservation, see the state-constant docstring); page exhaustion
+sends it back to QUEUED without consuming a slot.
 """
 
 from __future__ import annotations
@@ -26,9 +29,17 @@ import collections
 import dataclasses
 from typing import Any, Deque, Dict, List, Optional
 
-#: request lifecycle states
-QUEUED, PREFILLING, RUNNING, FINISHED = (
-    "queued", "prefilling", "running", "finished")
+#: request lifecycle states. ALLOCATING is the paged-KV admission
+#: window (``EngineConfig.kv_layout="paged"``): the queue head holds it
+#: while the engine matches its prompt against the prefix cache and
+#: reserves EVERY page the request can touch from the deterministic
+#: free list — on page exhaustion the request returns to QUEUED at the
+#: queue head (strict FIFO: later requests cannot jump a starved head)
+#: and admission stalls until finishing requests release pages.
+#: Allocation happens here, on the host, at admission — never inside a
+#: trace, and decode can never run out of pages mid-request.
+QUEUED, ALLOCATING, PREFILLING, RUNNING, FINISHED = (
+    "queued", "allocating", "prefilling", "running", "finished")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,12 +141,21 @@ class SlotScheduler:
     def can_admit(self) -> bool:
         return bool(self._free) and bool(self._queue)
 
+    def peek(self) -> Optional[RequestHandle]:
+        """The queue head (next to admit), without popping — the paged
+        engine's page-reservation hook: pages are reserved for the head
+        BEFORE it consumes a slot, so a page-starved request blocks in
+        the queue (strict FIFO), never in a slot."""
+        return self._queue[0] if self._queue else None
+
     def admit_next(self) -> RequestHandle:
         """Pop the oldest queued request into the lowest free slot.
 
         The request enters PREFILLING: it owns the slot (and its pristine
         cache row) but joins the decode batch only once the engine marks
-        it RUNNING after the last prefill chunk."""
+        it RUNNING after the last prefill chunk. (Under the paged layout
+        the head arrives here in ALLOCATING, its pages already
+        reserved.)"""
         slot = self._free.pop(0)
         handle = self._queue.popleft()
         handle.status = PREFILLING
