@@ -1,0 +1,44 @@
+"""ECM model honesty: predicted vs measured µs/call for the dot grids.
+
+The paper validates its instruction-mix analysis by comparing ECM
+predictions against measured cycles; this module gives that comparison a
+perf-trajectory datapoint. For every registered scheme it reads the
+``dot_<scheme>`` row the dot-variants sweep already measured (same
+process, same ``common.ROWS`` capture), computes the ECM-TPU predicted
+µs/call at the same n (``ecm.predicted_us_per_call``), and emits an
+``ecm_model_error_<scheme>`` row whose derived column carries the
+predicted/measured pair and their relative error.
+
+The measured column is CPU interpret-mode walltime — a PROXY, so on this
+host the relative error is large by construction and the row's value is
+the TREND: the cost auditor (CI stage 0c) pins the instruction mix the
+prediction is derived from, and on a real v5e the same row becomes the
+model-vs-hardware error the ROADMAP-item-5 autotuner consumes.
+"""
+
+from benchmarks import common
+from benchmarks.common import emit
+from repro.core import ecm
+from repro.kernels import schemes
+
+
+def main(n: int = 1 << 18) -> None:
+    print("# ECM model error: predicted (v5e model) vs measured "
+          "(CPU interpret PROXY) us/call on the dot grid rows")
+    print("# scheme,predicted_us,measured_us,rel_err")
+    measured = {row["name"]: row["us_per_call"] for row in common.ROWS}
+    for name in schemes.names():
+        row = measured.get(f"dot_{name}")
+        if row is None:
+            print(f"# (no dot_{name} row captured — run bench_dot_variants "
+                  f"first)")
+            continue
+        pred = ecm.predicted_us_per_call(name, n)
+        rel = ecm.model_relative_error(pred, row)
+        emit(f"ecm_model_error_{name}", pred,
+             f"predicted_us={pred:.3f};measured_us={row:.2f};"
+             f"rel_err={rel:.3f};n={n};measured=cpu-interpret-proxy")
+
+
+if __name__ == "__main__":
+    main()

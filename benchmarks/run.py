@@ -9,6 +9,9 @@ blocks). Mapping to the paper:
   bench_dot_variants    Fig. 2 — per-variant cycles across the
                         hierarchy (variant list = the scheme registry
                         via ecm.registry_tpu_blocks)
+  bench_model_error     model honesty: ECM-predicted vs measured
+                        us/call per scheme from the dot-grid rows
+                        (ecm_model_error_<scheme> rows)
   bench_batched         batched engine: one (batch, steps) grid vs a
                         per-call loop (the 2016 follow-up's saturation
                         claim, in batched-serving form)
@@ -53,6 +56,7 @@ def _benchmarks():
         bench_e2e,
         bench_flash_attention,
         bench_matmul_batched,
+        bench_model_error,
         bench_roofline,
         bench_scaling,
         bench_serve,
@@ -61,6 +65,9 @@ def _benchmarks():
     return [
         ("bench_accuracy", bench_accuracy, {}, {"n": 1 << 11}),
         ("bench_dot_variants", bench_dot_variants, {}, {"n": 1 << 14}),
+        # reads the dot_<scheme> rows bench_dot_variants just captured,
+        # so the n here must match its n
+        ("bench_model_error", bench_model_error, {}, {"n": 1 << 14}),
         ("bench_batched", bench_batched, {},
          {"batch": 2, "n": 8 * 128 * 4}),
         ("bench_matmul_batched", bench_matmul_batched, {},

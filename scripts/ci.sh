@@ -29,6 +29,13 @@
 # for what source text cannot prove (no psum primitive however spelled,
 # barriers surviving lowering, the decode tick compiling to a slot scan,
 # the O(#buckets) prefill program bound). Budget: < 60 s.
+# Stage 0c audits the PERFORMANCE contract: every registered scheme's
+# kernel bodies are traced at audit shapes, their instruction mix and
+# memory traffic statically derived, and cross-checked against the ECM
+# model (repro.analysis.costmodel) — declared instruction_mix vs traced
+# counts, bytes/element vs elem_bytes_for_dtype, no hidden HLO copies,
+# and the paper's kahan~=naive bandwidth-bound claim as a machine-checked
+# invariant. Budget: < 60 s.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,6 +51,9 @@ python -m repro.analysis --strict --budget 65 src/repro
 
 echo "=== stage 0b: engine-contract trace audit (jaxpr/HLO) ==="
 python -m repro.analysis --trace --strict
+
+echo "=== stage 0c: ECM cost audit (instruction mix / memory traffic) ==="
+python -m repro.analysis --cost --strict
 
 if [[ "$stage" == "fast" || "$stage" == "all" ]]; then
     echo "=== stage 1: tier-1 (fast) + repro.* deprecation gate ==="

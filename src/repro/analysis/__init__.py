@@ -1,9 +1,10 @@
-"""repro.analysis — two-level engine-contract auditor (AST + trace).
+"""repro.analysis — three-level engine-contract auditor (AST + trace + cost).
 
 The repo's numerics contract ("Kahan at no extra cost" only holds while
 EVERY reduction stays on the compensated engine — see the engine-contract
 section of ROADMAP.md) used to live in prose plus one fragile grep in
-``scripts/ci.sh``. This package makes it machine-checkable at TWO levels:
+``scripts/ci.sh``. This package makes it machine-checkable at THREE
+levels:
 
 * **AST rules** (:mod:`repro.analysis.rules`) encode the *source-text*
   clauses: a registry of checkers over annotated ASTs runs over
@@ -22,14 +23,26 @@ section of ROADMAP.md) used to live in prose plus one fragile grep in
   the traced scan bodies and surviving lowering, the decode tick
   compiling to a length-``max_slots`` scan, fp32 accumulator avals,
   no host callbacks, and the O(#buckets) prefill program-count bound.
+* **Cost rules** (:mod:`repro.analysis.costmodel`) encode the
+  *performance* clauses — the paper's instruction-mix analysis as a
+  verifier: one auto-registered cost target per kernel kind x
+  registered scheme traces the real ``ops.*`` entry point, statically
+  derives per-element FLOP counts and memory traffic from the
+  kernel-body jaxpr, and cross-checks the scheme's declared
+  ``InstructionMix``, the byte model, the optimized HLO (no hidden
+  transposes/converts), the bandwidth-bound "compensation is free"
+  claim, and the ECM tables' derivability from traced counts.
 
-Both levels share one report schema (``Violation`` / ``Pragma`` /
-``LintReport``), one exemption-audit trail, and one CLI::
+All levels share one report schema (``Violation`` / ``Pragma`` /
+``LintReport``), one exemption-audit trail, and one CLI (``--json``
+and ``--sarif`` — SARIF 2.1.0 for CI annotators — render any level)::
 
     python -m repro.analysis --strict --budget N src/repro  # CI stage 0
     python -m repro.analysis --trace --strict               # CI stage 0b
+    python -m repro.analysis --cost --strict                # CI stage 0c
     python -m repro.analysis --trace --target serve.decode_tick --json
-    python -m repro.analysis --list-rules [--trace]
+    python -m repro.analysis --cost --target cost.dot.kahan --sarif
+    python -m repro.analysis --list-rules [--trace | --cost]
     python -m repro.analysis --rule no-raw-psum --json src/repro
 
 ``--budget N`` is the exemption ratchet: the run fails once the
@@ -74,15 +87,18 @@ The rule is then selectable via ``--rule no-foo``, listed by
 ``--list-rules``, pragma-escapable as ``allow-no-foo(reason)``, and runs
 in the CI gate with no edits outside the registration call.
 
-Trace rules and targets follow the same registry pattern
-(``trace.register(TraceRule(...))`` / ``targets.register(Target(...))``);
-a trace rule applies to every target sharing one of its tags, and a
-target opts out of a rule with ``exempt={"rule-id": "reason"}`` — the
-exemption shows up in the report's audit trail exactly like a pragma.
+Trace and cost rules follow the same registry pattern
+(``trace.register(TraceRule(...))`` /
+``costmodel.register(CostRule(...))`` /
+``targets.register(Target(...))``); a trace/cost rule applies to every
+target sharing one of its tags, and a target opts out of a rule with
+``exempt={"rule-id": "reason"}`` — the exemption shows up in the
+report's audit trail exactly like a pragma. The
+:mod:`repro.analysis.costmodel` docstring has the cost-rule how-to.
 
 NOTE: importing :mod:`repro.analysis` (or the AST layer) stays
-dependency-light; the trace layer imports jax and is loaded lazily by
-the CLI only under ``--trace``.
+dependency-light; the trace and cost layers import jax and are loaded
+lazily by the CLI only under ``--trace`` / ``--cost``.
 """
 
 from repro.analysis.core import (  # noqa: F401

@@ -1,6 +1,6 @@
 """CLI: ``python -m repro.analysis [paths...] [options]``.
 
-Two audit levels share one report schema and one exit-code contract:
+Three audit levels share one report schema and one exit-code contract:
 
 * **AST mode** (default) lints source text: ``python -m repro.analysis
   --strict src/repro`` is CI stage 0 — exit 0 only when the tree has
@@ -15,6 +15,15 @@ Two audit levels share one report schema and one exit-code contract:
   is ``python -m repro.analysis --trace --strict``.  ``--target ID``
   restricts the audit (repeatable); paths are meaningless here and
   rejected.
+* **Cost mode** (``--cost``) audits what the kernels COST: per-scheme
+  cost targets are traced at audit shapes, their instruction mix and
+  memory traffic statically derived and cross-checked against the ECM
+  model (:mod:`repro.analysis.costmodel`).  CI stage 0c is
+  ``python -m repro.analysis --cost --strict``; ``--target ID``
+  restricts it (``cost.dot.kahan`` etc.).
+
+``--sarif`` renders any level's findings as a SARIF 2.1.0 report for CI
+annotations (``--json`` stays the stable machine-readable schema).
 """
 
 from __future__ import annotations
@@ -40,8 +49,9 @@ def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="engine-contract auditor: AST rules over source "
-                    "text, trace rules over jaxprs/HLO (see ROADMAP.md "
-                    "'Contract rules (machine-checked)')")
+                    "text, trace rules over jaxprs/HLO, cost rules over "
+                    "statically derived instruction mix + memory traffic "
+                    "(see ROADMAP.md 'Contract rules (machine-checked)')")
     p.add_argument("paths", nargs="*", type=Path,
                    help="files or directories to lint "
                         "(default: the repro package; AST mode only)")
@@ -53,17 +63,24 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--trace", action="store_true",
                    help="audit compiled jaxprs/HLO of the registered "
                         "targets instead of source text")
+    p.add_argument("--cost", action="store_true",
+                   help="audit statically derived kernel cost "
+                        "(instruction mix, memory traffic) against the "
+                        "ECM model")
     p.add_argument("--target", action="append", dest="targets",
                    metavar="ID",
-                   help="audit only this trace target (repeatable; "
-                        "implies --trace)")
+                   help="audit only this target (repeatable; implies "
+                        "--trace unless --cost is given)")
     p.add_argument("--budget", type=int, metavar="N",
                    help="fail when the annotated-exemption count "
                         "exceeds N (the ratchet)")
-    p.add_argument("--json", action="store_true",
-                   help="emit the machine-readable JSON report")
+    fmt = p.add_mutually_exclusive_group()
+    fmt.add_argument("--json", action="store_true",
+                     help="emit the machine-readable JSON report")
+    fmt.add_argument("--sarif", action="store_true",
+                     help="emit the SARIF 2.1.0 report (CI annotations)")
     p.add_argument("--list-rules", action="store_true",
-                   help="list registered rules (and, with --trace, "
+                   help="list registered rules (and, with --trace/--cost, "
                         "targets) and exit")
     p.add_argument("--show-exemptions", action="store_true",
                    help="also print every annotated exemption (the audit "
@@ -88,10 +105,42 @@ def _path_problems(paths: List[Path]) -> List[str]:
 
 def main(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
-    if args.targets:
+    if args.trace and args.cost:
+        print("error: choose one of --trace / --cost per run",
+              file=sys.stderr)
+        return 2
+    if args.targets and not args.cost:
         args.trace = True
 
-    if args.trace:
+    if args.cost:
+        # imported lazily, like trace mode: cost mode pulls in jax.
+        from repro.analysis import costmodel as _cost
+        from repro.analysis import targets as _targets
+        _cost.register_cost_targets()
+        if args.list_rules:
+            print(_report.render_cost_list(
+                _cost.registered().values(),
+                [t for t in _targets.registered().values()
+                 if "cost" in t.tags]))
+            return 0
+        problems = [f"unknown cost rule: {r} (registered: "
+                    f"{sorted(_cost.names())})"
+                    for r in (args.rules or []) if r not in _cost.names()]
+        problems += [f"unknown cost target: {t} (registered: "
+                     f"{sorted(n for n in _targets.names() if n.startswith('cost.'))})"
+                     for t in (args.targets or [])
+                     if t not in _targets.names()]
+        if args.paths:
+            problems.append(
+                "--cost audits the registered cost targets, not paths "
+                f"(got: {[str(p) for p in args.paths]})")
+        if problems:
+            for msg in problems:
+                print(f"error: {msg}", file=sys.stderr)
+            return 2
+        report = _cost.audit(target_ids=args.targets, rule_ids=args.rules)
+        rules = _cost.select(args.rules)
+    elif args.trace:
         # imported lazily: trace mode pulls in jax; plain AST lints stay
         # dependency-light and fast.
         from repro.analysis import targets as _targets
@@ -131,9 +180,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                 print(f"error: {msg}", file=sys.stderr)
             return 2
         report = lint_paths(paths, rule_ids=args.rules)
-        rules = None  # render_json defaults to the AST registry
+        rules = None  # render_json/render_sarif default to the AST registry
 
-    if args.json:
+    if args.sarif:
+        print(_report.render_sarif(report, rules=rules))
+    elif args.json:
         print(_report.render_json(report, budget=args.budget, rules=rules))
     else:
         print(_report.render_text(report, strict=args.strict,

@@ -104,16 +104,16 @@ def render_rule_list() -> str:
     return "\n".join(out)
 
 
-def render_trace_list(rules: Iterable, targets: Iterable) -> str:
-    """``--trace --list-rules`` view: trace rules plus the target registry."""
-    out = ["registered trace rules:"]
+def _render_target_level_list(level: str, rules: Iterable,
+                              targets: Iterable) -> str:
+    out = [f"registered {level} rules:"]
     for r in rules:
         out.append(f"  {r.id}")
         out.append(f"      {r.doc}")
         out.append(f"      applies to tags: {', '.join(r.tags)}")
         out.append(f"      fix: {r.fix_hint}")
     out.append("")
-    out.append("registered trace targets:")
+    out.append(f"registered {level} targets:")
     for t in targets:
         out.append(f"  {t.id}  [{', '.join(t.tags)}]")
         out.append(f"      {t.doc}")
@@ -122,3 +122,78 @@ def render_trace_list(rules: Iterable, targets: Iterable) -> str:
     out.append("")
     out.append("exemption escape: Target(..., exempt={'<rule>': '<reason>'})")
     return "\n".join(out)
+
+
+def render_trace_list(rules: Iterable, targets: Iterable) -> str:
+    """``--trace --list-rules`` view: trace rules plus the target registry."""
+    return _render_target_level_list("trace", rules, targets)
+
+
+def render_cost_list(rules: Iterable, targets: Iterable) -> str:
+    """``--cost --list-rules`` view: cost rules plus the cost targets."""
+    return _render_target_level_list("cost", rules, targets)
+
+
+#: pinned SARIF version/schema — tests/test_analysis.py asserts these so
+#: CI annotation consumers can rely on the exact dialect.
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def render_sarif(report: LintReport, *,
+                 rules: Optional[Iterable] = None) -> str:
+    """SARIF 2.1.0 report — the CI-annotation dialect every level shares.
+
+    Violations map to error-level results anchored at their
+    ``path:line:col`` (trace/cost findings carry line 0, clamped to the
+    SARIF minimum of 1); pragma errors surface as warning-level
+    ``pragma-error`` results so a malformed exemption is visible in the
+    same annotation stream it tried to silence.
+    """
+    rule_objs = list(rules) if rules is not None else \
+        list(registered().values())
+
+    def _result(rule_id: str, level: str, message: str, path: str,
+                line: int, col: int) -> dict:
+        return {
+            "ruleId": rule_id,
+            "level": level,
+            "message": {"text": message},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {"uri": path},
+                    "region": {"startLine": max(line, 1),
+                               "startColumn": max(col + 1, 1)},
+                },
+            }],
+        }
+
+    results = [
+        _result(v.rule, "error",
+                v.message + (f" [fix: {v.fix_hint}]" if v.fix_hint else ""),
+                v.path, v.line, v.col)
+        for v in report.violations
+    ]
+    results += [
+        _result("pragma-error", "warning", e, "", 1, 0)
+        for e in report.pragma_errors
+    ]
+    payload = {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": "repro.analysis",
+                    "rules": [{
+                        "id": r.id,
+                        "shortDescription": {"text": r.doc},
+                        "help": {"text": r.fix_hint},
+                    } for r in rule_objs],
+                },
+            },
+            "results": results,
+        }],
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

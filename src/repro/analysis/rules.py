@@ -16,10 +16,10 @@ no-legacy-mode-kwarg        the mode= kwarg was removed in PR 4 (AST-accurate
                             successor to the old ci.sh grep: the .at[...]
                             scatter ``mode="drop"`` resolves as a scatter and
                             needs no special-case exclusion)
-no-uncompensated-reduction  jnp.sum/dot/matmul/einsum/mean/cumsum/
-                            linalg.norm + lax.dot_general in hot-path
-                            packages route through ops.* or carry an
-                            annotated exemption
+no-uncompensated-reduction  jnp.sum/dot/matmul/einsum/mean/cumsum/prod/
+                            trace/average/linalg.norm + lax.dot_general
+                            in hot-path packages route through ops.* or
+                            carry an annotated exemption
 no-literal-interpret        interpret=True/False literals bypass
                             engine.resolve_interpret, the single authority
 no-hardcoded-accum-dtype    kernel bodies/oracles accumulate in the resolved
@@ -132,9 +132,10 @@ HOT_SCOPE = ("kernels/*", "serve/*", "models/*", "optim/*", "distributed/*")
 
 #: the jnp reduction entry points the contract covers (matmul-shaped
 #: contractions, full/axis sums, and the sum-derived reductions mean/
-#: cumsum); lax.dot_general and jnp.linalg.norm are checked too.
+#: cumsum/average, the diagonal sum trace, and the sequential-rounding
+#: product prod); lax.dot_general and jnp.linalg.norm are checked too.
 JNP_REDUCTIONS = ("sum", "dot", "matmul", "einsum", "vdot", "tensordot",
-                  "inner", "mean", "cumsum")
+                  "inner", "mean", "cumsum", "prod", "trace", "average")
 
 _JNP_REDUCTION_NAMES = frozenset(
     f"jax.numpy.{r}" for r in JNP_REDUCTIONS) | frozenset(

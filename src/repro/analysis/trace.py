@@ -422,6 +422,13 @@ def audit(target_ids: Optional[Iterable[str]] = None,
     report = LintReport()
     rules = select(rule_ids)
     for target in _targets.select(target_ids):
+        # a target no selected rule applies to is not built at all —
+        # cost-level targets (tags "cost-*", registered into the shared
+        # registry by analysis.costmodel) share this registry but only
+        # trace under the cost audit.
+        applicable = [r for r in rules if r.applies_to(target)]
+        if not applicable:
+            continue
         report.files += 1
         try:
             art = target.build()
@@ -433,9 +440,7 @@ def audit(target_ids: Optional[Iterable[str]] = None,
                 fix_hint="fix the registered build in analysis/targets.py "
                          "(a target that cannot trace cannot be audited)"))
             continue
-        for rule in rules:
-            if not rule.applies_to(target):
-                continue
+        for rule in applicable:
             found = [dataclasses.replace(v, fix_hint=v.fix_hint
                                          or rule.fix_hint)
                      for v in rule.checker(target, art)]

@@ -471,6 +471,86 @@ def ecm_tpu_for_scheme(machine: TPUMachine, scheme: Union[str, object],
     return ecm_tpu(machine, tpu_block_for_scheme(scheme, **block_kwargs))
 
 
+@dataclasses.dataclass(frozen=True)
+class CostExpectation:
+    """What the model EXPECTS a scheme's kernel body to cost, per element.
+
+    This is the comparison record the cost auditor
+    (``repro.analysis.costmodel``) checks traced jaxprs against: the
+    per-element add/mul counts of the product path (``mul_update``; the
+    dot kernel) and the sum path (``update``; asum and the matmul/flash
+    fold sites) at their RAW traced accounting
+    (``InstructionMix.traced_dot`` / ``traced_sum``), plus the streamed
+    bytes per element at the resolved accumulate dtype. ``table_flops``
+    is the canonical per-element flop total the ECM tables
+    (``tpu_block_for_scheme``) are built from — for most schemes it
+    equals ``dot_adds + dot_muls``; a deliberate canonical-vs-traced
+    split (dot2's FMA accounting) is visible as a difference here and
+    must carry a cost-rule exemption.
+    """
+
+    scheme: str
+    dot_adds: int        # mul_update path, adds per element
+    dot_muls: int        # mul_update path, muls per element
+    sum_adds: int        # update path, adds per element (muls are 0)
+    elem_bytes: int      # bytes per element at the accumulate dtype
+    streams: int         # input streams (dot: 2, asum: 1)
+    table_flops: int     # canonical flops/elem the ECM tables use
+
+    @property
+    def load_bytes_per_elem(self) -> int:
+        return self.streams * self.elem_bytes
+
+    @property
+    def traced_flops(self) -> int:
+        """Raw per-element VPU flops the traced dot body executes."""
+        return self.dot_adds + self.dot_muls
+
+
+def expected_cost(scheme: Union[str, object], *, compute_dtype=None,
+                  elem_bytes: int = 4, streams: int = 2) -> CostExpectation:
+    """The model-side cost expectation for one registered scheme.
+
+    The single place the cost auditor (and anything else comparing traced
+    kernels against the model) asks "what should this body cost?" —
+    counts come from the scheme's ``instruction_mix`` declaration, bytes
+    from ``elem_bytes_for_dtype``.
+    """
+    sch = _scheme(scheme)
+    if compute_dtype is not None:
+        elem_bytes = elem_bytes_for_dtype(compute_dtype)
+    dot_adds, dot_muls = sch.instruction_mix.traced_dot
+    sum_adds, _ = sch.instruction_mix.traced_sum
+    return CostExpectation(
+        scheme=sch.name, dot_adds=dot_adds, dot_muls=dot_muls,
+        sum_adds=sum_adds, elem_bytes=elem_bytes, streams=streams,
+        table_flops=sch.instruction_mix.flops)
+
+
+def predicted_us_per_call(scheme: Union[str, object], n: int, *,
+                          machine: TPUMachine = TPU_V5E,
+                          compute_dtype=None, streams: int = 2) -> float:
+    """ECM-predicted wall time (µs) for one length-``n`` reduction call.
+
+    Evaluates the TPU double-buffered model at block size ``n`` (one
+    block per call — the steady-state per-element rate times n) and
+    converts cycles to µs at the machine clock. This is the model column
+    of the ``ecm_model_error_<scheme>`` benchmark rows; the measured
+    column comes from the dot-grid timings in ``BENCH_*.json``.
+    """
+    res = ecm_tpu_for_scheme(machine, scheme, elems=n,
+                             compute_dtype=compute_dtype, streams=streams)
+    return res.t_db_cy / (machine.clock_ghz * 1e3)
+
+
+def model_relative_error(predicted_us: float, measured_us: float) -> float:
+    """|measured - predicted| / measured — the model-honesty scalar the
+    benchmark rows and the ROADMAP-item-5 autotuner report."""
+    if measured_us <= 0.0:
+        return float("inf")
+    return abs(measured_us - predicted_us) / measured_us
+
+
 # Named kernel constants, derived lazily (PEP 562 module __getattr__) from
 # the registry so importing repro.core.ecm does not eagerly import the
 # kernels package. Resolved values are cached in module globals.

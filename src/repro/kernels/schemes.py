@@ -116,14 +116,89 @@ PAIRWISE_FOLD = 32
 @dataclasses.dataclass(frozen=True)
 class InstructionMix:
     """Adds/muls executed per scalar iteration of the scheme's dot loop
-    (the paper's accounting unit; useful flops per update is always 2)."""
+    (the paper's accounting unit; useful flops per update is always 2).
+
+    ``adds``/``muls`` are the CANONICAL counts — the figures the paper's
+    accounting (and the ECM tables in ``repro.core.ecm``) use. When the
+    traced kernel body executes a different raw VPU-op count (e.g. a
+    split-based TwoProd where the canonical accounting assumes FMA), the
+    ``traced_*`` overrides declare what the jaxpr actually contains so
+    the cost auditor (``repro.analysis.costmodel``) can verify it; left
+    ``None`` they default to the canonical counts, which is correct for
+    any scheme whose jnp update IS its accounting.
+
+    * ``traced_adds`` / ``traced_muls`` — per-element add/mul count of the
+      product path (``mul_update``; the dot kernel body).
+    * ``traced_sum_adds`` — per-element add count of the sum path
+      (``update``; the asum kernel body and matmul/flash fold sites),
+      which by convention has zero muls.
+    """
 
     adds: int
     muls: int
+    traced_adds: Optional[int] = None
+    traced_muls: Optional[int] = None
+    traced_sum_adds: Optional[int] = None
 
     @property
     def flops(self) -> int:
         return self.adds + self.muls
+
+    @property
+    def traced_dot(self) -> Tuple[int, int]:
+        """(adds, muls) the traced ``mul_update`` body executes per element."""
+        return (self.adds if self.traced_adds is None else self.traced_adds,
+                self.muls if self.traced_muls is None else self.traced_muls)
+
+    @property
+    def traced_sum(self) -> Tuple[int, int]:
+        """(adds, muls) the traced ``update`` (sum path) executes per element."""
+        return (self.adds if self.traced_sum_adds is None
+                else self.traced_sum_adds, 0)
+
+
+#: keys accepted when coercing a mapping into an ``InstructionMix`` at
+#: ``register()`` time (the fail-fast menu in the error message).
+_MIX_KEYS = ("adds", "muls", "traced_adds", "traced_muls", "traced_sum_adds")
+_MIX_REQUIRED = ("adds", "muls")
+
+
+def validate_instruction_mix(mix, *, scheme_name: str = "?") -> InstructionMix:
+    """Coerce/validate an ``instruction_mix`` declaration, FAIL FAST.
+
+    Accepts an ``InstructionMix`` or a mapping with keys from
+    ``{adds, muls, traced_adds, traced_muls, traced_sum_adds}``
+    (``adds``/``muls`` required). Every count must be a non-negative int.
+    Raised at ``schemes.register()`` / built-in construction time so a
+    malformed declaration never surfaces later inside
+    ``core/ecm.py`` table construction or the cost auditor.
+    """
+    if isinstance(mix, InstructionMix):
+        fields = {k: getattr(mix, k) for k in _MIX_KEYS}
+    elif isinstance(mix, dict):
+        unknown = sorted(set(mix) - set(_MIX_KEYS))
+        missing = sorted(set(_MIX_REQUIRED) - set(mix))
+        if unknown or missing:
+            raise ValueError(
+                f"scheme {scheme_name!r}: instruction_mix keys must come "
+                f"from {list(_MIX_KEYS)} with {list(_MIX_REQUIRED)} "
+                f"required; unknown={unknown} missing={missing}")
+        fields = {k: mix.get(k) for k in _MIX_KEYS}
+    else:
+        raise TypeError(
+            f"scheme {scheme_name!r}: instruction_mix must be an "
+            f"InstructionMix or a mapping with keys from {list(_MIX_KEYS)}; "
+            f"got {type(mix).__name__}")
+    for key, val in fields.items():
+        required = key in _MIX_REQUIRED
+        if val is None and not required:
+            continue
+        if not isinstance(val, int) or isinstance(val, bool) or val < 0:
+            raise ValueError(
+                f"scheme {scheme_name!r}: instruction_mix.{key} must be a "
+                f"non-negative int{'' if required else ' or None'}; "
+                f"got {val!r}")
+    return mix if isinstance(mix, InstructionMix) else InstructionMix(**fields)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +222,14 @@ class CompensationScheme:
     description: str = ""
 
     def __post_init__(self):
+        # fail fast on malformed instruction_mix declarations (mapping
+        # coerced, counts type/range-checked) — a bad declaration should
+        # die here, not later inside ecm table construction or the cost
+        # auditor.
+        object.__setattr__(
+            self, "instruction_mix",
+            validate_instruction_mix(
+                self.instruction_mix, scheme_name=self.name))
         if self.mul_update is None:
             upd = self.update
             object.__setattr__(
@@ -262,7 +345,13 @@ DOT2 = CompensationScheme(
     # the follow-up studies quote and the pre-existing ECM table used;
     # the split-based fp32 kernel executes more raw VPU ops, but the
     # model keeps the canonical count for cross-paper comparability.
-    instruction_mix=InstructionMix(adds=13, muls=4),
+    # The traced_* overrides declare the raw counts the Veltkamp-split
+    # kernel body actually executes (verified by the cost auditor):
+    # TwoProd+TwoSum = 18 adds + 7 muls per element on the product path,
+    # TwoSum alone = 7 adds on the sum path.
+    instruction_mix=InstructionMix(adds=13, muls=4,
+                                   traced_adds=18, traced_muls=7,
+                                   traced_sum_adds=7),
     error_bound=_dot2_bound,
     description="TwoProd+TwoSum (Ogita-Rump-Oishi Dot2); twice-precision",
 )
@@ -287,6 +376,11 @@ def register(scheme: CompensationScheme, *, override: bool = False) -> Compensat
     """
     if not isinstance(scheme, CompensationScheme):
         raise TypeError(f"expected CompensationScheme, got {type(scheme)!r}")
+    # re-validate at the registry boundary: __post_init__ covers normal
+    # construction, but dataclasses.replace / object.__setattr__ edits
+    # between construction and registration must not slip a malformed
+    # mix into the ECM tables.
+    validate_instruction_mix(scheme.instruction_mix, scheme_name=scheme.name)
     if scheme.name in _REGISTRY and not override:
         raise ValueError(
             f"scheme {scheme.name!r} already registered "

@@ -227,6 +227,37 @@ def test_reduction_rule_silent_on_engine_mean():
     assert report.violations == []
 
 
+def test_reduction_rule_catches_prod_trace_average():
+    """prod (sequential-rounding product), trace (diagonal sum), and
+    average (weighted sum) are reductions too."""
+    src = """\
+    import jax.numpy as jnp
+    def stats(x):
+        p = jnp.prod(x)
+        t = jnp.trace(x)
+        a = jnp.average(x)
+        return p, t, a
+    """
+    report = _lint(src, "models/x.py", "no-uncompensated-reduction")
+    assert sorted(v.line for v in report.violations) == [3, 4, 5]
+    assert {v.rule for v in report.violations} == \
+        {"no-uncompensated-reduction"}
+
+
+def test_reduction_rule_silent_on_numpy_shape_math():
+    """np.prod over a static shape tuple (host-side shape math, no
+    accumulation on device data) must not fire — only the jnp spellings
+    hide a device-side sum."""
+    src = """\
+    import math
+    import numpy as np
+    def nbytes(x):
+        return int(np.prod(x.shape)) * 4 + math.prod(x.shape)
+    """
+    report = _lint(src, "models/x.py", "no-uncompensated-reduction")
+    assert report.violations == []
+
+
 def test_host_sync_rule_catches_asarray_and_block_until_ready():
     src = """\
     import numpy as np
@@ -372,6 +403,60 @@ def test_json_report_schema():
     assert "no-raw-psum" in ids
 
 
+def test_sarif_report_schema():
+    """Pin the SARIF 2.1.0 surface CI annotators consume: version/$schema
+    literals, the driver's rule metadata, result anatomy, and the
+    line-0 -> startLine-1 clamp trace/cost findings rely on."""
+    from repro.analysis.report import SARIF_SCHEMA, SARIF_VERSION, render_sarif
+
+    src = textwrap.dedent("""\
+    import jax.numpy as jnp
+    def f(a):
+        return jnp.sum(a)
+    """)
+    payload = json.loads(render_sarif(lint_source(src, "models/x.py")))
+    assert payload["version"] == SARIF_VERSION == "2.1.0"
+    assert payload["$schema"] == SARIF_SCHEMA
+    assert set(payload) == {"$schema", "version", "runs"}
+    (run,) = payload["runs"]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro.analysis"
+    rule_ids = {r["id"] for r in driver["rules"]}
+    assert "no-uncompensated-reduction" in rule_ids
+    for r in driver["rules"]:
+        assert set(r) == {"id", "shortDescription", "help"}
+    (res,) = run["results"]
+    assert set(res) == {"ruleId", "level", "message", "locations"}
+    assert res["ruleId"] == "no-uncompensated-reduction"
+    assert res["level"] == "error"
+    assert "[fix:" in res["message"]["text"]
+    region = res["locations"][0]["physicalLocation"]["region"]
+    assert region["startLine"] == 3 and region["startColumn"] >= 1
+    loc = res["locations"][0]["physicalLocation"]["artifactLocation"]
+    assert loc == {"uri": "models/x.py"}
+
+    # a line-0 anchor (trace/cost findings) clamps to the SARIF minimum
+    clamped = LintReport(violations=[Violation(
+        rule="x", path="cost.dot.kahan", line=0, col=0, message="m")])
+    payload = json.loads(render_sarif(clamped, rules=[]))
+    region = payload["runs"][0]["results"][0]["locations"][0][
+        "physicalLocation"]["region"]
+    assert region == {"startLine": 1, "startColumn": 1}
+
+
+def test_sarif_reports_pragma_errors_as_warnings():
+    from repro.analysis.report import render_sarif
+
+    src = textwrap.dedent("""\
+    import jax.numpy as jnp
+    def f(a):
+        return jnp.sum(a)  # contract: allow-no-uncompensated-reduction()
+    """)
+    payload = json.loads(render_sarif(lint_source(src, "models/x.py")))
+    levels = {r["ruleId"]: r["level"] for r in payload["runs"][0]["results"]}
+    assert levels["pragma-error"] == "warning"
+
+
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
@@ -395,6 +480,25 @@ def test_cli_exit_codes(tmp_path, capsys):
     assert cli_main(["--list-rules"]) == 0
     assert cli_main(["--rule", "no-such-rule", str(good)]) == 2
     assert cli_main([str(tmp_path / "missing.py")]) == 2
+
+
+def test_cli_sarif_output(tmp_path, capsys):
+    bad = tmp_path / "repro" / "models" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax.numpy as jnp\n"
+                   "def f(a):\n"
+                   "    return jnp.sum(a)\n")
+    # --sarif changes the report dialect, not the exit-code contract
+    assert cli_main(["--sarif", "--strict", str(bad)]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["version"] == "2.1.0"
+    results = payload["runs"][0]["results"]
+    assert results[0]["ruleId"] == "no-uncompensated-reduction"
+
+    # --json and --sarif are mutually exclusive (argparse group)
+    with pytest.raises(SystemExit) as exc:
+        cli_main(["--json", "--sarif", str(bad)])
+    assert exc.value.code == 2
 
 
 def test_cli_empty_reason_fails_only_strict(tmp_path, capsys):

@@ -1,0 +1,403 @@
+"""Cost-level auditor tests (repro.analysis.costmodel).
+
+Every cost rule fires on its bad fixture — a lying ``instruction_mix``
+declaration, a kernel body hiding a transpose, mismatched bytes for the
+resolved dtype, a mix past the bandwidth hide-point, an ECM table that
+drifted from the traced body; the static counters themselves; the
+``register()``-time instruction_mix validation (the satellite bugfix);
+runtime-registered schemes are audited end to end; target exemptions
+audit like pragmas; the shared JSON schema; the --cost CLI exit-code
+contract; and the tier-1 repo-wide ``--cost --strict`` self-audit
+(all four built-in schemes' declared mixes verified against their traced
+kernel bodies)."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import costmodel, targets
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.report import render_json
+from repro.kernels import schemes
+
+
+def _toy_target(tags, build=None, exempt=None):
+    return targets.Target(
+        id="toy.cost.fixture", build=build or (lambda: None),
+        tags=tuple(tags), doc="test fixture", exempt=exempt or {})
+
+
+def _fired(rule_id, tags, art):
+    return list(costmodel.get(rule_id).checker(_toy_target(tags), art))
+
+
+def _kahan_dot_artifact(**overrides):
+    """A CostArtifact consistent with the real traced kahan dot kernel
+    (4 adds + 1 mul / elem, 2 fp32 streams, constant (s, c) store)."""
+    fields = dict(kind="dot", scheme="kahan", compute_dtype=jnp.float32,
+                  adds=4.0, muls=1.0, mxu_calls=0,
+                  load_bytes_per_elem={8192: 8.0, 16384: 8.0},
+                  store_bytes={8192: 65536, 16384: 65536})
+    fields.update(overrides)
+    return costmodel.CostArtifact(**fields)
+
+
+@pytest.fixture
+def scratch_scheme():
+    """Register-and-cleanup helper: yields a registrar; every scheme it
+    registers (and the cost targets minted for it) is torn down after
+    the test, so the repo-wide self-audit stays pristine."""
+    minted = []
+
+    def _register(scheme):
+        schemes.register(scheme)
+        minted.append(scheme.name)
+        return scheme
+
+    yield _register
+    for name in minted:
+        schemes.unregister(name)
+    costmodel.register_cost_targets()  # prunes the stale cost cells
+
+
+# ---------------------------------------------------------------------------
+# static counters
+# ---------------------------------------------------------------------------
+
+def test_weighted_op_counts_weights_by_elements():
+    def f(a, b):
+        return (a + b) * a - b
+
+    jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4, 8), jnp.float32),
+                              jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    adds, muls, mxu = costmodel.weighted_op_counts(jaxpr)
+    assert (adds, muls, mxu) == (64.0, 32.0, 0)  # 2 adds + 1 mul x 32 elems
+
+
+def test_weighted_op_counts_ignores_ints_and_counts_mxu():
+    def f(a, i):
+        _ = i + 1  # integer add must not count
+        return jnp.dot(a, a)
+
+    jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                              jax.ShapeDtypeStruct((), jnp.int32))
+    adds, muls, mxu = costmodel.weighted_op_counts(jaxpr)
+    assert adds == 0.0 and muls == 0.0 and mxu == 1
+
+
+def test_find_pallas_call_fails_fast_without_a_grid():
+    jaxpr = jax.make_jaxpr(lambda a: a + 1.0)(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    with pytest.raises(ValueError, match="exactly one pallas_call"):
+        costmodel.find_pallas_call(jaxpr)
+
+
+def test_counts_recognize_bfloat16_avals():
+    # np.issubdtype does NOT consider ml_dtypes' bfloat16 a floating
+    # subdtype — the cost counters must (the bf16 accumulate cell).
+    def f(a, b):
+        return a + b
+
+    jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((8,), jnp.bfloat16),
+                              jax.ShapeDtypeStruct((8,), jnp.bfloat16))
+    adds, _, _ = costmodel.weighted_op_counts(jaxpr)
+    assert adds == 8.0
+
+
+# ---------------------------------------------------------------------------
+# cost-instruction-mix: a lying declaration is caught end to end
+# ---------------------------------------------------------------------------
+
+def test_instruction_mix_fires_on_lying_scheme(scratch_scheme):
+    # kahan's 4-add body declared as naive's 1+1 mix: the ECM tables
+    # would model 2 flops/elem while the kernel executes 5.
+    scratch_scheme(schemes.CompensationScheme(
+        name="liar", update=schemes.KAHAN.update,
+        instruction_mix=schemes.InstructionMix(adds=1, muls=1),
+        error_bound=schemes.KAHAN.error_bound))
+    report = costmodel.audit(target_ids=["cost.dot.liar"],
+                             rule_ids=["cost-instruction-mix"])
+    assert [v.rule for v in report.violations] == ["cost-instruction-mix"]
+    msg = report.violations[0].message
+    assert "4 adds + 1 muls" in msg and "1 + 1" in msg
+
+
+def test_instruction_mix_verifies_honest_runtime_scheme(scratch_scheme):
+    # the registry IS the coverage list: a scheme registered at runtime
+    # with an honest declaration audits clean on every kind, no wiring.
+    scratch_scheme(schemes.CompensationScheme(
+        name="honest", update=schemes.NAIVE.update,
+        instruction_mix=schemes.InstructionMix(adds=1, muls=1),
+        error_bound=schemes.NAIVE.error_bound))
+    report = costmodel.audit(target_ids=[
+        "cost.dot.honest", "cost.asum.honest", "cost.matmul.honest",
+        "cost.flash.honest"])
+    assert report.violations == [], [v.format() for v in report.violations]
+    assert report.files == 4
+
+
+# ---------------------------------------------------------------------------
+# cost-no-hidden-copies: a transposing body is caught in the HLO
+# ---------------------------------------------------------------------------
+
+def test_hidden_copies_fires_on_transposing_body():
+    def hlo():
+        blk = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = lambda s, c, a, b, g: ((s + a * b).T, c.T)  # noqa: E731
+        return jax.jit(fn).lower(blk, blk, blk, blk, step).compile() \
+            .as_text()
+
+    art = _kahan_dot_artifact(hlo=hlo)
+    found = _fired("cost-no-hidden-copies", ("cost", "cost-dot"), art)
+    assert found and "transpose" in found[0].message
+
+
+def test_hidden_copies_fires_on_dtype_round_trip():
+    def hlo():
+        blk = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def fn(s, c, a, b, g):
+            p = (a.astype(jnp.bfloat16) * b.astype(jnp.bfloat16)) \
+                .astype(jnp.float32)
+            return s + p, c
+
+        return jax.jit(fn).lower(blk, blk, blk, blk, step).compile() \
+            .as_text()
+
+    art = _kahan_dot_artifact(hlo=hlo)
+    found = _fired("cost-no-hidden-copies", ("cost", "cost-dot"), art)
+    assert found and "convert" in found[0].message
+
+
+def test_hidden_copies_silent_on_real_scheme_bodies():
+    report = costmodel.audit(
+        target_ids=[f"cost.dot.{n}" for n in schemes.names()],
+        rule_ids=["cost-no-hidden-copies"])
+    assert report.violations == [], [v.format() for v in report.violations]
+
+
+# ---------------------------------------------------------------------------
+# cost-memory-traffic: mismatched bytes for the resolved dtype
+# ---------------------------------------------------------------------------
+
+def test_memory_traffic_fires_on_mismatched_dtype_bytes():
+    # 8 B/elem streamed but the artifact resolved bfloat16 (2 B x 2
+    # streams = 4 B/elem expected): the dtype never reached the kernel.
+    art = _kahan_dot_artifact(compute_dtype=jnp.bfloat16)
+    found = _fired("cost-memory-traffic", ("cost", "cost-dot"), art)
+    assert len(found) == 2  # one per measured n
+    assert "bfloat16" in found[0].message and "predicts 4" in found[0].message
+
+
+def test_memory_traffic_fires_on_n_dependent_store():
+    art = _kahan_dot_artifact(store_bytes={8192: 65536, 16384: 131072})
+    found = _fired("cost-memory-traffic", ("cost", "cost-dot"), art)
+    assert found and "n-independent" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# cost-compensation-ratio: the paper's claim, machine-checked
+# ---------------------------------------------------------------------------
+
+def test_compensation_ratio_fires_past_the_hide_point():
+    # 30 flops/elem is far past v5e's HBM hide-point — compensation is
+    # no longer free and the rule must say so.
+    art = _kahan_dot_artifact(adds=25.0, muls=5.0)
+    found = _fired("cost-compensation-ratio", ("cost", "cost-dot"), art)
+    assert found and "compute-bound" in found[0].message
+
+
+def test_compensation_ratio_pins_kahan_free_claim():
+    # kahan ~= naive on the real traced counts: the headline result.
+    report = costmodel.audit(
+        target_ids=["cost.dot.naive", "cost.dot.kahan",
+                    "cost.dot.pairwise"],
+        rule_ids=["cost-compensation-ratio"])
+    assert report.violations == [], [v.format() for v in report.violations]
+
+
+def test_dot2_ratio_and_table_exemptions_are_live():
+    # dot2's split-based body IS past the hide-point at raw counts —
+    # the exemptions must be present AND suppressing a live finding
+    # (used=True), not stale documentation.
+    report = costmodel.audit(target_ids=["cost.dot.dot2"])
+    assert report.violations == [], [v.format() for v in report.violations]
+    exempt = {p.rule: p.used for p in report.exemptions}
+    assert exempt == {"cost-compensation-ratio": True,
+                      "cost-ecm-tables-derived": True}
+
+
+# ---------------------------------------------------------------------------
+# cost-ecm-tables-derived: table drift carries the measured counts
+# ---------------------------------------------------------------------------
+
+def test_ecm_tables_fires_on_drifted_mix():
+    art = _kahan_dot_artifact(adds=10.0, muls=2.0)
+    found = _fired("cost-ecm-tables-derived", ("cost", "cost-dot"), art)
+    assert found
+    assert "models 5 flops/elem" in found[0].message
+    assert "executes 12" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: instruction_mix validated at register() time
+# ---------------------------------------------------------------------------
+
+def test_register_rejects_malformed_mix_type():
+    with pytest.raises(TypeError, match="adds.*muls.*traced_adds"):
+        schemes.CompensationScheme(
+            name="badmix", update=schemes.NAIVE.update,
+            instruction_mix="4 adds, 1 mul",
+            error_bound=schemes.NAIVE.error_bound)
+
+
+def test_register_rejects_bad_mapping_keys_with_menu():
+    with pytest.raises(ValueError, match="unknown=\\['flops'\\]"):
+        schemes.CompensationScheme(
+            name="badmix", update=schemes.NAIVE.update,
+            instruction_mix={"adds": 1, "muls": 1, "flops": 2},
+            error_bound=schemes.NAIVE.error_bound)
+
+
+def test_register_rejects_negative_counts():
+    with pytest.raises(ValueError, match="non-negative int"):
+        schemes.CompensationScheme(
+            name="badmix", update=schemes.NAIVE.update,
+            instruction_mix=schemes.InstructionMix(adds=-1, muls=1),
+            error_bound=schemes.NAIVE.error_bound)
+
+
+def test_construction_coerces_mapping_mix(scratch_scheme):
+    sch = scratch_scheme(schemes.CompensationScheme(
+        name="mapmix", update=schemes.NAIVE.update,
+        instruction_mix={"adds": 1, "muls": 1},
+        error_bound=schemes.NAIVE.error_bound))
+    assert isinstance(sch.instruction_mix, schemes.InstructionMix)
+    assert sch.instruction_mix.traced_dot == (1, 1)
+    assert sch.instruction_mix.traced_sum == (1, 0)
+
+
+def test_register_revalidates_post_construction_edits():
+    sch = schemes.CompensationScheme(
+        name="mutated", update=schemes.NAIVE.update,
+        instruction_mix=schemes.InstructionMix(adds=1, muls=1),
+        error_bound=schemes.NAIVE.error_bound)
+    object.__setattr__(sch, "instruction_mix", {"adds": 1})
+    with pytest.raises(ValueError, match="missing=\\['muls'\\]"):
+        schemes.register(sch)
+
+
+def test_traced_overrides_default_to_canonical():
+    mix = schemes.InstructionMix(adds=4, muls=1)
+    assert mix.traced_dot == (4, 1) and mix.traced_sum == (4, 0)
+    dot2 = schemes.DOT2.instruction_mix
+    assert dot2.flops == 17  # canonical, what the ECM tables keep
+    assert dot2.traced_dot == (18, 7) and dot2.traced_sum == (7, 0)
+
+
+# ---------------------------------------------------------------------------
+# registry + driver mechanics
+# ---------------------------------------------------------------------------
+
+def test_cost_rule_registry_roundtrip():
+    rule = costmodel.CostRule(
+        id="cost-toy", tags=("cost-dot",), checker=lambda t, a: iter(()),
+        fix_hint="n/a", doc="toy")
+    costmodel.register(rule)
+    try:
+        assert "cost-toy" in costmodel.names()
+        with pytest.raises(ValueError, match="already registered"):
+            costmodel.register(rule)
+        with pytest.raises(ValueError, match="unknown cost rule"):
+            costmodel.get("cost-nope")
+    finally:
+        costmodel.unregister("cost-toy")
+    assert "cost-toy" not in costmodel.names()
+
+
+def test_register_cost_targets_idempotent_and_prunes(scratch_scheme):
+    scratch_scheme(schemes.CompensationScheme(
+        name="ephemeral", update=schemes.NAIVE.update,
+        instruction_mix=schemes.InstructionMix(adds=1, muls=1),
+        error_bound=schemes.NAIVE.error_bound))
+    ids = costmodel.register_cost_targets()
+    assert "cost.dot.ephemeral" in ids
+    assert ids == costmodel.register_cost_targets()  # idempotent
+    schemes.unregister("ephemeral")
+    pruned = costmodel.register_cost_targets()
+    assert "cost.dot.ephemeral" not in pruned
+    assert "cost.dot.ephemeral" not in targets.names()
+
+
+def test_build_failure_becomes_finding_not_crash():
+    def boom():
+        raise RuntimeError("no trace for you")
+
+    targets.register(_toy_target(("cost", "cost-dot"), build=boom))
+    try:
+        report = costmodel.audit(target_ids=["toy.cost.fixture"])
+        (v,) = report.violations
+        assert v.rule == "cost-build-error"
+        assert "no trace for you" in v.message
+    finally:
+        targets.unregister("toy.cost.fixture")
+
+
+def test_stale_cost_exemption_surfaces_as_unused():
+    targets.register(_toy_target(
+        ("cost", "cost-dot"), build=_kahan_dot_artifact,
+        exempt={"cost-compensation-ratio": "does not fire"}))
+    try:
+        report = costmodel.audit(target_ids=["toy.cost.fixture"])
+        assert report.violations == []
+        (p,) = report.exemptions
+        assert p.rule == "cost-compensation-ratio" and p.used is False
+    finally:
+        targets.unregister("toy.cost.fixture")
+
+
+def test_cost_report_shares_json_schema():
+    report = costmodel.audit(target_ids=["cost.dot.kahan"])
+    payload = json.loads(render_json(
+        report, rules=costmodel.registered().values()))
+    assert set(payload) == {"files", "violations", "exemptions",
+                            "pragma_errors", "rules", "budget"}
+    assert {r["id"] for r in payload["rules"]} == set(costmodel.names())
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_cost_exit_codes(capsys):
+    assert cli_main(["--cost", "--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "cost-instruction-mix" in out and "cost.dot.kahan" in out
+
+    assert cli_main(["--cost", "--target", "cost.dot.kahan",
+                     "--rule", "cost-instruction-mix"]) == 0
+    assert cli_main(["--cost", "--target", "no.such.target"]) == 2
+    assert cli_main(["--cost", "--rule", "no-such-rule"]) == 2
+    assert cli_main(["--cost", "--trace"]) == 2
+    assert cli_main(["--cost", "src/repro"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# tier-1 repo-wide self-audit
+# ---------------------------------------------------------------------------
+
+def test_repo_cost_self_audit_clean():
+    """The shipped kernels' cost IS what the schemes declare: zero
+    violations across every (kind x scheme) cell, and every exemption is
+    live (suppressing a real finding, not stale)."""
+    report = costmodel.audit()
+    assert report.violations == [], [v.format() for v in report.violations]
+    # 4 kinds x 4 built-ins + the bf16 cell
+    assert report.files >= 17
+    stale = [p for p in report.exemptions if not p.used]
+    assert stale == [], [f"{p.path}: allow-{p.rule}" for p in stale]
